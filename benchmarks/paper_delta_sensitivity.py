@@ -1,0 +1,22 @@
+"""Paper Figs. 5-7: normalized weighted CCT vs reconfiguration delay delta,
+for K in {3,4,5} under imbalanced and balanced rate vectors."""
+from __future__ import annotations
+
+from benchmarks.common import BALANCED, HEADER, IMBALANCED, fmt_row, run_setting
+
+
+def main(deltas=(2, 4, 6, 8, 10, 12), ks=(3, 4, 5), seeds=(0, 1, 2)) -> dict:
+    out = {}
+    print("== Figs. 5-7 — delta sensitivity ==")
+    print(HEADER)
+    for K in ks:
+        for label, rates in (("imbal", IMBALANCED[K]), ("bal", BALANCED[K])):
+            for d in deltas:
+                res = run_setting(rates=rates, delta=float(d), seeds=seeds)
+                out[(K, label, d)] = res
+                print(fmt_row(f"K={K} {label:5s} delta={d:<4}", res))
+    return out
+
+
+if __name__ == "__main__":
+    main()

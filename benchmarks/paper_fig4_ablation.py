@@ -1,0 +1,22 @@
+"""Paper Fig. 4: ablation under the default setting (N=16, M=100, K=3,
+rates [10,20,30], delta=8). Normalized total weighted CCT + tail CCT."""
+from __future__ import annotations
+
+from benchmarks.common import HEADER, run_setting
+from repro.core import ALGORITHMS
+
+
+def main(seeds=(0, 1, 2, 3, 4)) -> dict:
+    res = run_setting(seeds=seeds)
+    print("== Fig. 4 — ablation at the default setting ==")
+    print(f"{'algorithm':14s} {'NormW':>7s} {'p95':>7s} {'p99':>7s}   paper")
+    paper = {"ours": "1.00", "rho-assign": "1.64", "rand-assign": "1.31",
+             "sunflow-core": "2.64", "rand-sunflow": "3.03"}
+    for alg in ALGORITHMS:
+        r = res[alg]
+        print(f"{alg:14s} {r['w']:7.3f} {r['p95']:7.3f} {r['p99']:7.3f}   {paper[alg]}x")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Figs. 8-10: normalized weighted CCT vs number of coflows M,
+for K in {3,4,5} under imbalanced and balanced rates (N=16, delta=8)."""
+from __future__ import annotations
+
+from benchmarks.common import BALANCED, HEADER, IMBALANCED, fmt_row, run_setting
+
+
+def main(ms=(50, 100, 150, 200, 250), ks=(3, 4, 5), seeds=(0, 1)) -> dict:
+    out = {}
+    print("== Figs. 8-10 — M scaling ==")
+    print(HEADER)
+    for K in ks:
+        for label, rates in (("imbal", IMBALANCED[K]), ("bal", BALANCED[K])):
+            for m in ms:
+                res = run_setting(M=m, rates=rates, seeds=seeds)
+                out[(K, label, m)] = res
+                print(fmt_row(f"K={K} {label:5s} M={m:<4}", res))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Tables III-V: normalized weighted CCT vs number of ports N,
+for K in {3,4,5} under imbalanced and balanced rates (M=100, delta=8)."""
+from __future__ import annotations
+
+from benchmarks.common import BALANCED, HEADER, IMBALANCED, fmt_row, run_setting
+
+
+def main(ns=(8, 12, 16, 24, 32), ks=(3, 4, 5), seeds=(0, 1, 2)) -> dict:
+    out = {}
+    print("== Tables III-V — N scaling ==")
+    print(HEADER)
+    for K in ks:
+        for label, rates in (("imbal", IMBALANCED[K]), ("bal", BALANCED[K])):
+            for n in ns:
+                res = run_setting(N=n, rates=rates, seeds=seeds)
+                out[(K, label, n)] = res
+                print(fmt_row(f"K={K} {label:5s} N={n:<4}", res))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run artifacts (results/dryrun*.json):
+three terms per (arch x shape) on the single-pod mesh, dominant bottleneck,
+useful-compute ratio, and the one-line "what would move the dominant term"."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+LEVERS = {
+    ("memory", "attn"): "flash-attention kernel (removes S^2 score HBM traffic)",
+    ("memory", "other"): "fuse fp32 intermediates / recompute instead of spill",
+    ("compute", "any"): "larger per-chip batch or lower remat recompute",
+    ("collective", "any"): "overlap grad reduce-scatter with bwd; int8 pod hop",
+}
+
+
+def lever(arch: str, dominant: str) -> str:
+    if dominant == "memory":
+        kind = "other" if arch.startswith("xlstm") else "attn"
+        return LEVERS[("memory", kind)]
+    return LEVERS[(dominant, "any")]
+
+
+def main(path: str = "results/dryrun_v3.json", mesh: str = "single") -> list:
+    if not os.path.exists(path):
+        for alt in ("results/dryrun_v2.json", "results/dryrun_v1.json"):
+            if os.path.exists(alt):
+                path = alt
+                break
+    if not os.path.exists(path):
+        print(f"[roofline_report] {path} missing — run "
+              f"`python -m repro.launch.dryrun --all --out {path}` first")
+        return []
+    rows = []
+    for r in json.load(open(path)):
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rf = r["roofline"]
+        rows.append(rf | {"peak_gib": r["memory"]["peak_estimate_bytes"] / 2**30,
+                          "lever": lever(r["arch"], rf["dominant"])})
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    print(f"== Roofline terms (mesh={mesh}, per chip, seconds) ==")
+    print(f"{'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+          f"{'coll':>9s} {'dom':>10s} {'useful':>7s} {'roofl%':>7s} {'peakGiB':>8s}")
+    for x in rows:
+        print(f"{x['arch']:24s} {x['shape']:12s} {x['compute_s']:9.4f} "
+              f"{x['memory_s']:9.4f} {x['collective_s']:9.4f} {x['dominant']:>10s} "
+              f"{x['useful_fraction']:7.3f} {100*x['roofline_fraction']:6.2f}% "
+              f"{x['peak_gib']:8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,69 @@
+"""Benchmark aggregator — one section per paper table/figure plus the
+framework-level reports.
+
+  python -m benchmarks.run [--full]
+
+Default mode keeps wall time modest (fewer seeds / subsets); --full runs the
+paper's complete grids.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-comm", action="store_true",
+                    help="skip the 512-device comm-planner compile")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    from benchmarks import (
+        bench_core_scaling,
+        comm_planner,
+        online_arrivals,
+        paper_delta_sensitivity,
+        paper_fig4_ablation,
+        paper_gamma_w,
+        paper_m_scaling,
+        paper_n_scaling,
+        roofline_report,
+    )
+
+    print("#" * 72)
+    paper_fig4_ablation.main(seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2))
+    print("#" * 72)
+    paper_delta_sensitivity.main(
+        deltas=(2, 4, 6, 8, 10, 12) if args.full else (2, 8, 12),
+        seeds=(0, 1, 2) if args.full else (0, 1))
+    print("#" * 72)
+    paper_n_scaling.main(ns=(8, 12, 16, 24, 32) if args.full else (8, 16, 32),
+                         seeds=(0, 1, 2) if args.full else (0, 1))
+    print("#" * 72)
+    paper_m_scaling.main(ms=(50, 100, 150, 200, 250) if args.full
+                         else (50, 100, 250),
+                         seeds=(0, 1) if args.full else (0,))
+    print("#" * 72)
+    paper_gamma_w.main(seeds=(0, 1) if args.full else (0,))
+    print("#" * 72)
+    online_arrivals.main(seeds=(0, 1) if args.full else (0,))
+    print("#" * 72)
+    bench_core_scaling.main()
+    print("#" * 72)
+    roofline_report.main()
+    if not args.skip_comm:
+        print("#" * 72)
+        try:
+            comm_planner.main()
+        except Exception as e:  # the compile is heavy; report, don't die
+            print(f"[comm_planner] skipped: {e}")
+    print("#" * 72)
+    print(f"benchmarks done in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,414 @@
+"""Static analyzer for compiled (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()`` alone: XLA's HloCostAnalysis visits a
+``while`` body **once**, so any scanned-layer model (all of ours) undercounts
+FLOPs, bytes, and collective traffic by ~the layer count. This analyzer walks
+the computation graph, multiplies while bodies by their static trip count
+(recovered from the loop-condition constant — the lax.scan pattern), sums
+matmul/conv FLOPs, estimates HBM traffic at fusion surfaces, and accounts
+every collective op with operand/result bytes and group sizes.
+
+Validated in tests/test_analysis.py: a scanned stack and its unrolled twin
+agree to <2%, and the unrolled numbers agree with cost_analysis().
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["HLOAnalysis", "CollectiveOp", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+(\(.*?\)|[\w\[\]\{\},]+)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+)
+# ops whose surface traffic we count toward the HBM estimate
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "reduce", "sort", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "transpose", "broadcast", "copy",
+    "convert", "iota", "concatenate", "slice", "pad", "reverse", "reshape",
+    "select-and-scatter", "custom-call", "rng", "rng-bit-generator", "compare",
+    "add", "multiply", "subtract", "divide", "exponential", "tanh", "select",
+} | set(COLLECTIVE_OPS)
+_SKIP_RESULT = {"parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast", "while", "conditional", "call", "after-all",
+                "copy-start", "copy-done", "all-reduce-done", "all-gather-done",
+                "collective-permute-done", "partition-id", "replica-id"}
+
+
+def type_bytes(t: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str  # operand list + attrs (raw text after the opening paren)
+
+    @property
+    def operands(self) -> list[str]:
+        # operand section = up to the matching close paren; names only
+        depth, end = 1, len(self.rest)
+        for idx, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = idx
+                    break
+        return re.findall(r"%([\w\.\-]+)", self.rest[:end])
+
+    @property
+    def attrs(self) -> str:
+        return self.rest
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    operand_bytes: int  # per-device bytes entering the op
+    result_bytes: int
+    group_size: int
+    trip_mult: int  # how many times it executes (while nesting)
+    metadata: str = ""
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return self.operand_bytes * self.trip_mult
+
+    @property
+    def wire_bytes(self) -> int:
+        """Ring-model bytes a participating device puts on the wire."""
+        g, b_in, b_out = self.group_size, self.operand_bytes, self.result_bytes
+        if g <= 1:
+            return 0
+        kind = self.kind.replace("-start", "")
+        if kind == "all-reduce":
+            w = 2 * (g - 1) / g * b_in
+        elif kind == "all-gather":
+            w = (g - 1) / g * b_out  # result is the gathered buffer
+        elif kind == "reduce-scatter":
+            w = (g - 1) / g * b_in
+        elif kind == "all-to-all":
+            w = (g - 1) / g * b_in
+        else:  # collective-permute
+            w = b_in
+        return int(w * self.trip_mult)
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    flops: float  # per-device matmul/conv FLOPs (trip-count aware)
+    hbm_bytes: float  # per-device fusion-surface traffic estimate
+    collectives: list[CollectiveOp]
+
+    @property
+    def collective_operand_bytes(self) -> int:
+        return sum(c.total_operand_bytes for c in self.collectives)
+
+    @property
+    def collective_wire_bytes(self) -> int:
+        return sum(c.wire_bytes for c in self.collectives)
+
+    def collective_counts(self) -> dict:
+        out: dict = defaultdict(int)
+        for c in self.collectives:
+            out[c.kind.replace("-start", "")] += c.trip_mult
+        return dict(out)
+
+
+def _parse_computations(text: str) -> dict[str, list[_Op]]:
+    comps: dict[str, list[_Op]] = {}
+    cur: list[_Op] | None = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = comps.setdefault(m.group(1), [])
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            cur.append(_Op(name=mo.group(1), result_type=mo.group(2),
+                           opcode=mo.group(3), rest=mo.group(4)))
+    return comps
+
+
+def _dot_flops(op: _Op, types: dict[str, str]) -> float:
+    out_elems = 0
+    for dt, dims in _SHAPE_RE.findall(op.result_type):
+        if dt in _DTYPE_BYTES and _DTYPE_BYTES[dt]:
+            n = 1
+            for d in (dims.split(",") if dims else []):
+                n *= int(d)
+            out_elems += n
+    # contracted size from the lhs operand shape and lhs_contracting_dims
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    ops = op.operands
+    if not mdims or not ops or ops[0] not in types:
+        return 2.0 * out_elems  # degenerate; should not happen for real dots
+    lhs_t = types[ops[0]]
+    sh = _SHAPE_RE.search(lhs_t)
+    if not sh:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in sh.group(2).split(",")] if sh.group(2) else []
+    k = 1
+    for ci in mdims.group(1).split(","):
+        if ci != "" and int(ci) < len(lhs_dims):
+            k *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: _Op, types: dict[str, str]) -> float:
+    # output elems * 2 * (kernel spatial * in-channels) — parse kernel operand
+    out_elems = max(type_bytes(op.result_type), 1)
+    ops = op.operands
+    if len(ops) < 2 or ops[1] not in types:
+        return 2.0 * out_elems
+    ksh = _SHAPE_RE.search(types[ops[1]])
+    kn = 1
+    if ksh and ksh.group(2):
+        for d in ksh.group(2).split(","):
+            kn *= int(d)
+    # rough: per output element, 2*prod(kernel dims except out-channel)
+    return 2.0 * out_elems * max(kn ** 0.5, 1)  # conservative; convs are minor here
+
+
+def _group_size(rest: str, total_devices: int) -> int:
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+def analyze_hlo(text: str, *, total_devices: int = 1) -> HLOAnalysis:
+    comps = _parse_computations(text)
+    types: dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            types[op.name] = op.result_type
+
+    # computations reached via fusion `calls=` keep their flops but their
+    # internal ops are not HBM surface traffic
+    fused = set()
+    bodies: dict[str, tuple[str, str]] = {}  # while op name -> (body, cond)
+    for ops in comps.values():
+        for op in ops:
+            mc = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+            if op.opcode == "fusion" and mc:
+                fused.add(mc.group(1))
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for op in comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST_RE.findall(
+                op.opcode + "(" + op.rest)]
+        return max(consts) if consts else 1
+
+    _SLICERS = {"dynamic-slice", "gather"}
+
+    def _op_surface_bytes(op: _Op) -> float:
+        """HBM traffic of one surface op, slice-aware.
+
+        dynamic-slice/gather read+write only the slice; dynamic-update-slice
+        and scatter touch only the updated region (the buffer itself is
+        aliased in place by XLA).
+        """
+        if op.opcode in _SLICERS:
+            return 2.0 * type_bytes(op.result_type)
+        if op.opcode in ("dynamic-update-slice", "scatter"):
+            ops_ = op.operands
+            upd = type_bytes(types.get(ops_[1], "")) if len(ops_) > 1 else 0
+            return 2.0 * upd
+        if op.opcode == "fusion":
+            mc = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+            if mc and mc.group(1) in comps:
+                return _fusion_surface_bytes(op, mc.group(1))
+        return type_bytes(op.result_type) + sum(
+            type_bytes(types.get(o, "")) for o in op.operands)
+
+    _PASS_THROUGH = {"reshape", "bitcast", "transpose", "copy", "convert",
+                     "broadcast"}
+
+    def _fusion_surface_bytes(op: _Op, called: str) -> float:
+        """Fusion surface traffic with slice-aware parameter charging.
+
+        A parameter consumed ONLY by dynamic-slice/gather — possibly through
+        pass-through ops (reshape/transpose/convert/...) — is charged at the
+        sliced size, not the full buffer (scan bodies receive the whole
+        stacked xs array as a fusion operand but read one slice per trip).
+        """
+        cops = comps[called]
+        param_name_by_idx: dict[int, str] = {}
+        for o in cops:
+            if o.opcode == "parameter":
+                m = re.match(r"(\d+)\)", o.rest)
+                if m:
+                    param_name_by_idx[int(m.group(1))] = o.name
+        consumers: dict[str, list[_Op]] = {}
+        for o in cops:
+            for dep in o.operands:
+                consumers.setdefault(dep, []).append(o)
+
+        def slice_closure(name: str, depth: int = 0):
+            """(only_sliced, slicer_ops) reachability through pass-throughs."""
+            if depth > 6:
+                return False, []
+            cons = consumers.get(name, [])
+            if not cons:
+                return False, []
+            slicers = []
+            for c in cons:
+                if c.opcode in _SLICERS:
+                    slicers.append(c)
+                elif c.opcode in _PASS_THROUGH:
+                    ok, sl = slice_closure(c.name, depth + 1)
+                    if not ok:
+                        return False, []
+                    slicers += sl
+                else:
+                    return False, []
+            return True, slicers
+
+        dus_ops = [o for o in cops if o.opcode in ("dynamic-update-slice",
+                                                   "scatter")]
+        aliased_params = set()
+        total = 0.0
+        if dus_ops:
+            # in-place update fusion: charge updated regions, alias buffers
+            for o in dus_ops:
+                ops_ = o.operands
+                if len(ops_) > 1:
+                    total += 2.0 * type_bytes(types.get(ops_[1], ""))
+                if ops_:
+                    aliased_params.add(ops_[0])
+        else:
+            total += type_bytes(op.result_type)
+        for idx, operand in enumerate(op.operands):
+            pname = param_name_by_idx.get(idx)
+            if pname is None:
+                continue
+            if pname in aliased_params:
+                continue
+            only_sliced, slicers = slice_closure(pname)
+            if only_sliced and slicers:
+                total += sum(type_bytes(c.result_type) for c in slicers)
+            else:
+                total += type_bytes(types.get(operand, ""))
+        return total
+
+    memo: dict[tuple[str, bool], tuple[float, float, list]] = {}
+
+    def walk(name: str, surface: bool) -> tuple[float, float, list[CollectiveOp]]:
+        key = (name, surface)
+        if key in memo:
+            return memo[key]
+        flops = 0.0
+        bts = 0.0
+        colls: list[CollectiveOp] = []
+        for op in comps.get(name, []):
+            if op.opcode == "dot":
+                flops += _dot_flops(op, types)
+            elif op.opcode == "convolution":
+                flops += _conv_flops(op, types)
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                mcnd = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                if mb and mcnd:
+                    t = trip_count(mcnd.group(1))
+                    f2, b2, c2 = walk(mb.group(1), surface)
+                    flops += t * f2
+                    bts += t * b2
+                    for c in c2:
+                        colls.append(dataclasses.replace(
+                            c, trip_mult=c.trip_mult * t))
+                continue
+            if op.opcode in ("call", "conditional", "async-start"):
+                for cn in re.findall(
+                        r"(?:to_apply|branch_computations=\{|calls)=?%?([\w\.\-]+)",
+                        op.rest):
+                    if cn in comps:
+                        f2, b2, c2 = walk(cn, surface)
+                        flops += f2
+                        bts += b2
+                        colls += c2
+                continue
+            if op.opcode == "fusion":
+                mc = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                if mc and mc.group(1) in comps:
+                    f2, _, c2 = walk(mc.group(1), False)
+                    flops += f2
+                    colls += c2
+            base = op.opcode.replace("-start", "")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                ob = sum(type_bytes(types.get(o, "")) for o in op.operands)
+                mg = re.search(r"replica_groups=(\{\{[\d,\{\}]*\}\}|\[[\d,]+\]<=\[[\d,]+\](?:T\([\d,]+\))?)",
+                               op.rest)
+                msp = re.search(r"source_target_pairs=\{([\d,\{\}]*)\}", op.rest)
+                colls.append(CollectiveOp(
+                    kind=op.opcode, operand_bytes=ob,
+                    result_bytes=type_bytes(op.result_type),
+                    group_size=_group_size(op.rest, total_devices),
+                    trip_mult=1,
+                    metadata=(mg.group(1) if mg else "")
+                    + ("|st=" + msp.group(1) if msp else "")))
+            if surface and op.opcode in _TRAFFIC_OPS:
+                bts += _op_surface_bytes(op)
+        memo[key] = (flops, bts, colls)
+        return memo[key]
+
+    # entry computation: the one never referenced as fused/body/cond/to_apply
+    referenced = set(fused)
+    for ops in comps.values():
+        for op in ops:
+            for pat in (r"calls=%?([\w\.\-]+)", r"body=%?([\w\.\-]+)",
+                        r"condition=%?([\w\.\-]+)", r"to_apply=%?([\w\.\-]+)"):
+                for cn in re.findall(pat, op.rest):
+                    referenced.add(cn)
+    entries = [c for c in comps if c not in referenced]
+    flops = bts = 0.0
+    colls: list[CollectiveOp] = []
+    for e in entries:
+        f2, b2, c2 = walk(e, True)
+        flops += f2
+        bts += b2
+        colls += c2
+    return HLOAnalysis(flops=flops, hbm_bytes=bts, collectives=colls)

@@ -1,0 +1,8 @@
+"""Target-hardware constants (TPU v5e) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

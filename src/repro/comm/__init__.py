@@ -1,0 +1,7 @@
+"""Collectives-as-coflows: extract a compiled step's cross-block collective
+traffic, express it as coflows over the multi-core OCS pod interconnect, and
+plan circuit schedules with the paper's Algorithm 1.
+"""
+from .coflows import BlockMap, collective_demands, step_coflows  # noqa: F401
+from .extract import decode_groups, decode_pairs  # noqa: F401
+from .planner import OCSFabric, PlanReport, plan_circuits  # noqa: F401

@@ -1,0 +1,85 @@
+"""Circuit planner: run Algorithm 1 (and its ablation baselines) on the
+coflows extracted from a compiled step, producing the circuit schedule the
+fabric manager would program plus its scheduled CCT.
+
+The planner reports, per algorithm:
+  - total / weighted CCT of the step's collective phases on the OCS layer,
+  - makespan (= the collective term the fabric actually delivers),
+  - and the idealized wire-speed lower bound  (delta + rho/R per coflow),
+so EXPERIMENTS.md can show "wire-speed -> +reconfiguration+contention,
+scheduled well (OURS) vs scheduled naively (baselines)".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (
+    ALGORITHMS,
+    Instance,
+    Schedule,
+    global_lb,
+    run,
+    validate,
+)
+from repro.core.coflow import Coflow
+
+__all__ = ["OCSFabric", "PlanReport", "plan_circuits"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OCSFabric:
+    """The pod-interconnect: K parallel OCS cores over the aggregation blocks.
+
+    Rates are per-port in bytes/second; delta in seconds. Defaults model a
+    4-core heterogeneous Jupiter-style DCNI layer: two 400G cores and two
+    200G cores per block port, 10 ms circuit reconfiguration.
+    """
+
+    rates: tuple = (25e9, 25e9, 50e9, 50e9)
+    delta: float = 10e-3
+
+
+@dataclasses.dataclass
+class PlanReport:
+    algorithm: str
+    total_cct: float
+    weighted_cct: float
+    makespan: float
+    p95: float
+    p99: float
+    ideal_lb_sum: float  # sum of per-coflow wire-speed lower bounds
+    schedule: Schedule
+
+    def row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("schedule")
+        return d
+
+
+def plan_circuits(
+    coflows: list[Coflow],
+    fabric: OCSFabric = OCSFabric(),
+    algorithms: tuple = ALGORITHMS,
+    *,
+    seed: int = 0,
+) -> dict[str, PlanReport]:
+    inst = Instance(coflows=tuple(coflows),
+                    rates=np.asarray(fabric.rates), delta=fabric.delta)
+    lbs = [global_lb(c.demand, inst.R, inst.delta) for c in coflows]
+    out: dict[str, PlanReport] = {}
+    for alg in algorithms:
+        s = run(inst, alg, seed=seed)
+        validate(s)
+        out[alg] = PlanReport(
+            algorithm=alg,
+            total_cct=s.total_cct,
+            weighted_cct=s.total_weighted_cct,
+            makespan=float(s.ccts.max()) if len(s.ccts) else 0.0,
+            p95=float(np.quantile(s.ccts, 0.95)) if len(s.ccts) else 0.0,
+            p99=float(np.quantile(s.ccts, 0.99)) if len(s.ccts) else 0.0,
+            ideal_lb_sum=float(np.sum(lbs)),
+            schedule=s,
+        )
+    return out

@@ -1,0 +1,2 @@
+from .base import SHAPES, ArchSpec, ShapeSpec, cache_specs, input_specs  # noqa: F401
+from .registry import ARCHS, all_cells, get_arch  # noqa: F401

@@ -1,0 +1,92 @@
+"""Config substrate: shape specs, arch specs, and abstract input builders.
+
+Every assigned (architecture x input-shape) cell is a well-defined
+``(ArchSpec, ShapeSpec)`` pair; ``input_specs`` builds weak-type-correct
+ShapeDtypeStruct stand-ins for every model input of that cell (never
+allocating), which is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig, build_model
+
+__all__ = ["ShapeSpec", "ArchSpec", "SHAPES", "input_specs", "cache_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    config: ModelConfig  # the full assigned configuration
+    smoke: ModelConfig  # reduced same-family config for CPU smoke tests
+    source: str  # provenance per the assignment sheet
+
+    def supports(self, shape: ShapeSpec) -> tuple[bool, str]:
+        """(runnable, reason-if-skipped) for an assigned cell."""
+        if shape.name == "long_500k" and self.config.full_attention:
+            return False, "SKIP(full-attention): 500k dense-attention decode is outside the design envelope"
+        return True, ""
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the *batch* inputs of one cell.
+
+    train  -> {tokens, labels, [prefix_embeds | src_frames]}
+    prefill-> {tokens, [prefix_embeds | src_frames]}
+    decode -> {tokens (B,1)}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": _tok(B, S), "labels": _tok(B, S)}
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_tokens, cfg.d_model), cfg.dtype)
+        if cfg.family == "audio":
+            out["src_frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _tok(B, S)}
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_tokens, cfg.d_model), cfg.dtype)
+        if cfg.family == "audio":
+            out["src_frames"] = jax.ShapeDtypeStruct(
+                (B, max(S // 8, 1), cfg.d_model), cfg.dtype)
+        return out
+    if shape.kind == "decode":
+        return {"tokens": _tok(B, 1)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract cache pytree for serve-shape cells (prefill/decode)."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    extra = cfg.n_prefix_tokens
+    kw = {}
+    if cfg.family == "audio":
+        kw["s_src"] = max(S // 8, 1)
+    return model.make_caches(B, S + extra, abstract=True, **kw)

@@ -1,0 +1,24 @@
+"""qwen1.5-4b [dense]: QKV bias [hf:Qwen/Qwen1.5-4B].
+
+40L d_model=2560 20H (MHA kv=20) d_ff=6912 vocab=151936.
+20 heads do not divide the 16-way model axis: the sharding planner falls
+back to replicated heads with TP carried by the d_ff/vocab dims (see
+DESIGN.md §Distribution).
+"""
+from repro.configs.base import ArchSpec
+from repro.models.api import ModelConfig
+
+ARCH = ArchSpec(
+    arch_id="qwen1.5-4b",
+    config=ModelConfig(
+        name="qwen1.5-4b", family="dense",
+        n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20,
+        d_ff=6912, vocab=151936, qkv_bias=True,
+    ),
+    smoke=ModelConfig(
+        name="qwen1.5-4b-smoke", family="dense",
+        n_layers=2, d_model=60, n_heads=5, n_kv_heads=5,
+        d_ff=128, vocab=512, qkv_bias=True,
+    ),
+    source="hf:Qwen/Qwen1.5-0.5B; hf",
+)

@@ -1,0 +1,31 @@
+"""The paper's primary contribution: multi-coflow scheduling in multi-core OCS
+networks under the not-all-stop reconfiguration model (Algorithm 1), with its
+lower bounds, ablation baselines, feasibility validator, theory certificates,
+and trace-driven workload generation.
+"""
+from .assignment import (  # noqa: F401
+    AssignedFlow,
+    Assignment,
+    assign_random,
+    assign_rho_only,
+    assign_tau_aware,
+)
+from .circuit_scheduler import (  # noqa: F401
+    ScheduledFlow,
+    schedule_core_list,
+    schedule_core_sunflow,
+)
+from .coflow import Coflow, Flow, Instance, col_loads, rho, row_loads, tau  # noqa: F401
+from .lower_bounds import CoreState, global_lb, per_core_lb  # noqa: F401
+from .ordering import order_coflows, priority_scores  # noqa: F401
+from .scheduler import ALGORITHMS, Schedule, run, tail_cct, weighted_cct  # noqa: F401
+from .simulator import validate  # noqa: F401
+from .theory import (  # noqa: F401
+    check_lemma1,
+    check_lemma2,
+    check_lemma3,
+    check_theorem1,
+    check_theorem2,
+    gamma_w,
+)
+from .trace import load_fb_trace, sample_instance, synth_fb_trace  # noqa: F401

@@ -1,0 +1,109 @@
+"""Cross-core flow assignment (Alg. 1 lines 5-17) and ablated variants.
+
+All assignment policies share the same contract:
+
+    assign(inst, pi) -> list over m (in pi order) of per-coflow assignments,
+    each a list[AssignedFlow] with the chosen core.
+
+The paper's policy (``assign_tau_aware``) places every flow, largest first,
+on the core minimizing the tau-aware per-core prefix lower bound
+``T_LB^k(D^k_{1:m} ⊕ d)``. Ties break to the lowest core index to keep runs
+deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .coflow import Flow, Instance, nonzero_flows
+from .lower_bounds import CoreState
+
+__all__ = ["AssignedFlow", "Assignment", "assign_tau_aware", "assign_rho_only", "assign_random"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AssignedFlow:
+    flow: Flow
+    core: int
+
+
+@dataclasses.dataclass
+class Assignment:
+    """Result of the assignment phase for a whole instance."""
+
+    inst: Instance
+    pi: np.ndarray                      # global order (coflow indices)
+    flows: list[list[AssignedFlow]]     # indexed by position m in pi
+    state: CoreState                    # final prefix state (for bound checks)
+
+    def per_core_demand(self, m_pos: int) -> np.ndarray:
+        """D^k_{pi(m)} for every core: (K, N, N)."""
+        out = np.zeros((self.inst.K, self.inst.N, self.inst.N))
+        for af in self.flows[m_pos]:
+            out[af.core, af.flow.i, af.flow.j] += af.flow.size
+        return out
+
+    def prefix_per_core(self, m_pos: int) -> np.ndarray:
+        """D^k_{1:m} (inclusive) for every core: (K, N, N)."""
+        out = np.zeros((self.inst.K, self.inst.N, self.inst.N))
+        for p in range(m_pos + 1):
+            for af in self.flows[p]:
+                out[af.core, af.flow.i, af.flow.j] += af.flow.size
+        return out
+
+    def all_flows(self) -> list[AssignedFlow]:
+        return [af for per_coflow in self.flows for af in per_coflow]
+
+
+def _iter_coflow_flows(inst: Instance, pi: np.ndarray) -> list[list[Flow]]:
+    return [
+        nonzero_flows(inst.coflows[int(ci)], order_pos=pos, largest_first=True)
+        for pos, ci in enumerate(pi)
+    ]
+
+
+def assign_tau_aware(inst: Instance, pi: np.ndarray) -> Assignment:
+    """The paper's greedy tau-aware assignment (Alg. 1, lines 5-17)."""
+    state = CoreState(K=inst.K, N=inst.N, rates=inst.rates, delta=inst.delta)
+    out: list[list[AssignedFlow]] = []
+    for flows in _iter_coflow_flows(inst, pi):
+        placed: list[AssignedFlow] = []
+        for f in flows:
+            cand = state.candidate_bounds(f.i, f.j, f.size)
+            k = int(np.argmin(cand))  # argmin ties -> lowest core index
+            state.assign(f.i, f.j, f.size, k)
+            placed.append(AssignedFlow(flow=f, core=k))
+        out.append(placed)
+    return Assignment(inst=inst, pi=pi, flows=out, state=state)
+
+
+def assign_rho_only(inst: Instance, pi: np.ndarray) -> Assignment:
+    """RHO-ASSIGN: tau-blind — minimize rho^k_{1:m}/r^k after placement."""
+    state = CoreState(K=inst.K, N=inst.N, rates=inst.rates, delta=inst.delta)
+    out: list[list[AssignedFlow]] = []
+    for flows in _iter_coflow_flows(inst, pi):
+        placed: list[AssignedFlow] = []
+        for f in flows:
+            cand = state.candidate_rho_bounds(f.i, f.j, f.size)
+            k = int(np.argmin(cand))
+            state.assign(f.i, f.j, f.size, k)
+            placed.append(AssignedFlow(flow=f, core=k))
+        out.append(placed)
+    return Assignment(inst=inst, pi=pi, flows=out, state=state)
+
+
+def assign_random(inst: Instance, pi: np.ndarray, *, seed: int = 0) -> Assignment:
+    """RAND-ASSIGN: core k with probability proportional to r^k."""
+    rng = np.random.default_rng(seed)
+    probs = inst.rates / inst.R
+    state = CoreState(K=inst.K, N=inst.N, rates=inst.rates, delta=inst.delta)
+    out: list[list[AssignedFlow]] = []
+    for flows in _iter_coflow_flows(inst, pi):
+        placed: list[AssignedFlow] = []
+        for f in flows:
+            k = int(rng.choice(inst.K, p=probs))
+            state.assign(f.i, f.j, f.size, k)
+            placed.append(AssignedFlow(flow=f, core=k))
+        out.append(placed)
+    return Assignment(inst=inst, pi=pi, flows=out, state=state)

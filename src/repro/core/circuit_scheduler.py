@@ -1,0 +1,224 @@
+"""Intra-core circuit scheduling under the not-all-stop model (Alg. 1, lines 18-32).
+
+The per-core policy is port-exclusive, non-preemptive and work-conserving, and
+respects the global coflow order pi. We implement it as an event-driven list
+scheduler: whenever a port frees (or at t=0), pending flows are scanned in
+priority order and every flow whose ingress and egress ports are both idle is
+established immediately (occupying both ports for ``delta + size/rate``).
+
+``schedule_core_sunflow`` replaces this with Sunflow's coflow-at-a-time
+behaviour (SUNFLOW-CORE baseline): coflows are served strictly sequentially on
+the core — no cross-coflow work conservation — with intra-coflow largest-first
+list scheduling, matching Sunflow's non-preemptive single-coflow scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+__all__ = [
+    "ScheduledFlow",
+    "schedule_core_list",
+    "schedule_core_sunflow",
+    "schedule_core_reserving",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledFlow:
+    coflow: int     # position in global order pi
+    cid: int        # original coflow id
+    i: int
+    j: int
+    core: int
+    size: float
+    t_establish: float  # circuit establishment begins (ports become busy)
+    t_start: float      # transmission begins = t_establish + delta
+    t_complete: float   # t_establish + delta + size/rate
+
+
+def _run_list_scheduler(
+    fi: np.ndarray,
+    fj: np.ndarray,
+    sizes: np.ndarray,
+    rate: float,
+    delta: float,
+    n_ports: int,
+    t0: float = 0.0,
+    guard: bool = True,
+) -> np.ndarray:
+    """Core event loop. Flows are given in priority order; returns t_establish.
+
+    ``guard=True`` implements the paper's work-conservation wording literally
+    ("when there are NO higher-priority flows on a port pair, lower-priority
+    flows can be processed"): a pending higher-priority flow *protects* its
+    two ports, so lower-priority flows cannot backfill onto them. Without the
+    guard (guard=False) any feasible flow starts immediately — greedier, but
+    a long low-priority flow can occupy a port a high-priority flow needs
+    next, which is how the Lemma 3 bound gets violated in practice (see
+    tests/test_theory.py::TestReproductionFindings).
+    """
+    F = len(sizes)
+    t_est = np.full(F, -1.0)
+    if F == 0:
+        return t_est
+    free_in = np.full(n_ports, t0)
+    free_out = np.full(n_ports, t0)
+    done = np.zeros(F, dtype=bool)
+    remaining = F
+    events: list[float] = [t0]
+    heapq.heapify(events)
+    seen_times: set[float] = set()
+
+    while remaining:
+        if not events:
+            raise RuntimeError("scheduler deadlock: pending flows but no events")
+        t = heapq.heappop(events)
+        while events and events[0] == t:
+            heapq.heappop(events)
+        # Candidates whose ports are currently free, in priority order.
+        pend = np.nonzero(~done)[0]
+        blocked_in = np.zeros(n_ports, dtype=bool)
+        blocked_out = np.zeros(n_ports, dtype=bool)
+        for f in pend:
+            i, j = fi[f], fj[f]
+            if (free_in[i] <= t and free_out[j] <= t
+                    and not blocked_in[i] and not blocked_out[j]):
+                t_est[f] = t
+                tc = t + delta + sizes[f] / rate
+                free_in[i] = tc
+                free_out[j] = tc
+                done[f] = True
+                remaining -= 1
+                if tc not in seen_times:
+                    seen_times.add(tc)
+                    heapq.heappush(events, tc)
+            elif guard:
+                # a pending higher-priority flow protects its port pair
+                blocked_in[i] = True
+                blocked_out[j] = True
+    return t_est
+
+
+def schedule_core_list(
+    flows: list,  # list[AssignedFlow] for one core, in global priority order
+    core: int,
+    rate: float,
+    delta: float,
+    n_ports: int,
+    guard: bool = False,
+) -> list[ScheduledFlow]:
+    """The paper's work-conserving priority list scheduler for one core
+    (Alg. 1 lines 23-31, literal: any flow whose two ports are idle starts).
+
+    ``guard=True`` is the priority-guarded variant (pending higher-priority
+    flows protect their port pairs). Reproduction finding: the guard HURTS —
+    it creates cascading idle-while-blocked states (~2x worse weighted CCT on
+    trace workloads) and still does not restore Lemma 3; see EXPERIMENTS.md.
+    """
+    fi = np.array([af.flow.i for af in flows], dtype=np.int64)
+    fj = np.array([af.flow.j for af in flows], dtype=np.int64)
+    sizes = np.array([af.flow.size for af in flows], dtype=np.float64)
+    t_est = _run_list_scheduler(fi, fj, sizes, rate, delta, n_ports, guard=guard)
+    out = []
+    for idx, af in enumerate(flows):
+        te = float(t_est[idx])
+        out.append(
+            ScheduledFlow(
+                coflow=af.flow.coflow,
+                cid=af.flow.cid,
+                i=af.flow.i,
+                j=af.flow.j,
+                core=core,
+                size=af.flow.size,
+                t_establish=te,
+                t_start=te + delta,
+                t_complete=te + delta + af.flow.size / rate,
+            )
+        )
+    return out
+
+
+def schedule_core_reserving(
+    flows: list,  # list[AssignedFlow] for one core, in global priority order
+    core: int,
+    rate: float,
+    delta: float,
+    n_ports: int,
+) -> list[ScheduledFlow]:
+    """Alternative reading of Alg. 1 lines 23-31: sequential reservation.
+
+    Flows are committed strictly in pi order; each starts at the earliest time
+    both its ports are free given prior reservations, with no backfilling of
+    lower-priority flows into gaps. Kept as a documented variant (see
+    EXPERIMENTS.md reproduction notes): neither this nor the work-conserving
+    policy satisfies Lemma 3 on all adversarial instances, and the two differ
+    measurably on trace workloads.
+    """
+    avail_in = np.zeros(n_ports)
+    avail_out = np.zeros(n_ports)
+    out = []
+    for af in flows:
+        i, j, d = af.flow.i, af.flow.j, af.flow.size
+        t = float(max(avail_in[i], avail_out[j]))
+        tc = t + delta + d / rate
+        avail_in[i] = tc
+        avail_out[j] = tc
+        out.append(
+            ScheduledFlow(
+                coflow=af.flow.coflow,
+                cid=af.flow.cid,
+                i=i,
+                j=j,
+                core=core,
+                size=d,
+                t_establish=t,
+                t_start=t + delta,
+                t_complete=tc,
+            )
+        )
+    return out
+
+
+def schedule_core_sunflow(
+    flows: list,  # list[AssignedFlow] for one core, in global priority order
+    core: int,
+    rate: float,
+    delta: float,
+    n_ports: int,
+) -> list[ScheduledFlow]:
+    """SUNFLOW-CORE: serve coflows one at a time (barrier between coflows)."""
+    out: list[ScheduledFlow] = []
+    barrier = 0.0
+    # Group by coflow position, preserving pi order.
+    groups: dict[int, list] = {}
+    for af in flows:
+        groups.setdefault(af.flow.coflow, []).append(af)
+    for pos in sorted(groups):
+        grp = groups[pos]
+        # Sunflow schedules a single coflow's flows longest-first.
+        grp = sorted(grp, key=lambda af: (-af.flow.size, af.flow.i, af.flow.j))
+        fi = np.array([af.flow.i for af in grp], dtype=np.int64)
+        fj = np.array([af.flow.j for af in grp], dtype=np.int64)
+        sizes = np.array([af.flow.size for af in grp], dtype=np.float64)
+        t_est = _run_list_scheduler(fi, fj, sizes, rate, delta, n_ports, t0=barrier)
+        for idx, af in enumerate(grp):
+            te = float(t_est[idx])
+            tc = te + delta + af.flow.size / rate
+            out.append(
+                ScheduledFlow(
+                    coflow=af.flow.coflow,
+                    cid=af.flow.cid,
+                    i=af.flow.i,
+                    j=af.flow.j,
+                    core=core,
+                    size=af.flow.size,
+                    t_establish=te,
+                    t_start=te + delta,
+                    t_complete=tc,
+                )
+            )
+            barrier = max(barrier, tc)
+    return out

@@ -1,0 +1,178 @@
+"""Coflow abstractions: demand matrices, port loads, instances.
+
+Faithful to the paper's Section III notation:
+  - ``D_m``   : N x N demand matrix of coflow ``C_m`` (bytes, unitless here).
+  - ``rho_m`` : max row or column sum of ``D_m``.
+  - ``tau_m`` : max number of nonzero entries in any row or column of ``D_m``.
+All core-level computations are float64 numpy (control-plane code).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Coflow",
+    "Instance",
+    "Flow",
+    "row_loads",
+    "col_loads",
+    "rho",
+    "tau",
+    "nonzero_flows",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Coflow:
+    """One coflow: an ``N x N`` demand matrix plus a positive weight."""
+
+    cid: int
+    demand: np.ndarray  # (N, N) float64, >= 0
+    weight: float = 1.0
+
+    def __post_init__(self) -> None:
+        d = np.asarray(self.demand, dtype=np.float64)
+        if d.ndim != 2 or d.shape[0] != d.shape[1]:
+            raise ValueError(f"demand must be square, got {d.shape}")
+        if (d < 0).any():
+            raise ValueError("demand entries must be non-negative")
+        if self.weight <= 0:
+            raise ValueError("weight must be positive")
+        object.__setattr__(self, "demand", d)
+
+    @property
+    def n_ports(self) -> int:
+        return self.demand.shape[0]
+
+    @property
+    def rho(self) -> float:
+        return rho(self.demand)
+
+    @property
+    def tau(self) -> int:
+        return tau(self.demand)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(self.demand.sum())
+
+    @property
+    def num_flows(self) -> int:
+        return int((self.demand > 0).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    """One (sub)flow record used by assignment / scheduling phases."""
+
+    coflow: int  # position in the global order pi (0-based)
+    cid: int     # original coflow id
+    i: int       # ingress port
+    j: int       # egress port
+    size: float  # bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """A scheduling problem: M coflows over a K-core OCS network.
+
+    ``rates[k]`` is the per-port transmission rate of core ``k`` and ``delta``
+    the (not-all-stop) reconfiguration delay. All coflows share the same N.
+    """
+
+    coflows: tuple[Coflow, ...]
+    rates: np.ndarray  # (K,) float64 > 0
+    delta: float
+
+    def __post_init__(self) -> None:
+        r = np.asarray(self.rates, dtype=np.float64)
+        if r.ndim != 1 or (r <= 0).any():
+            raise ValueError("rates must be a 1-D positive vector")
+        if self.delta < 0:
+            raise ValueError("delta must be >= 0")
+        ns = {c.n_ports for c in self.coflows}
+        if len(ns) > 1:
+            raise ValueError(f"all coflows must share N, got {ns}")
+        object.__setattr__(self, "rates", r)
+        object.__setattr__(self, "coflows", tuple(self.coflows))
+
+    @property
+    def M(self) -> int:
+        return len(self.coflows)
+
+    @property
+    def K(self) -> int:
+        return int(self.rates.shape[0])
+
+    @property
+    def N(self) -> int:
+        return self.coflows[0].n_ports if self.coflows else 0
+
+    @property
+    def R(self) -> float:
+        """Aggregate per-port rate across cores."""
+        return float(self.rates.sum())
+
+    @property
+    def r_max(self) -> float:
+        return float(self.rates.max())
+
+    @property
+    def weights(self) -> np.ndarray:
+        return np.array([c.weight for c in self.coflows], dtype=np.float64)
+
+    @property
+    def tau_max(self) -> int:
+        return max((c.tau for c in self.coflows), default=0)
+
+    @property
+    def psi(self) -> int:
+        """psi = max{K, tau_max} from Theorem 1."""
+        return max(self.K, self.tau_max)
+
+
+def row_loads(D: np.ndarray) -> np.ndarray:
+    """d_{m,i} = sum_j d_m(i, j) for every ingress port i."""
+    return np.asarray(D, dtype=np.float64).sum(axis=1)
+
+
+def col_loads(D: np.ndarray) -> np.ndarray:
+    """d_{m,j} = sum_i d_m(i, j) for every egress port j."""
+    return np.asarray(D, dtype=np.float64).sum(axis=0)
+
+
+def rho(D: np.ndarray) -> float:
+    """Maximum port load: max over all row sums and column sums."""
+    D = np.asarray(D, dtype=np.float64)
+    if D.size == 0:
+        return 0.0
+    return float(max(row_loads(D).max(), col_loads(D).max()))
+
+
+def tau(D: np.ndarray) -> int:
+    """Max number of nonzero entries in any row or column."""
+    nz = np.asarray(D) > 0
+    if nz.size == 0:
+        return 0
+    return int(max(nz.sum(axis=1).max(), nz.sum(axis=0).max()))
+
+
+def nonzero_flows(c: Coflow, order_pos: int, *, largest_first: bool = True) -> list[Flow]:
+    """Nonzero flows of a coflow, sorted by size (non-increasing by default).
+
+    Ties broken deterministically by (i, j) to keep runs reproducible
+    (the paper notes intra-coflow order does not affect the guarantee).
+    """
+    ii, jj = np.nonzero(c.demand)
+    sizes = c.demand[ii, jj]
+    if largest_first:
+        key = np.lexsort((jj, ii, -sizes))
+    else:
+        key = np.lexsort((jj, ii, sizes))
+    return [
+        Flow(coflow=order_pos, cid=c.cid, i=int(ii[t]), j=int(jj[t]), size=float(sizes[t]))
+        for t in key
+    ]

@@ -1,0 +1,99 @@
+"""Lower bounds from Section IV-A and the incremental per-core LB state.
+
+Per-core lower bound (Eq. 1):
+    T_LB^k(D) = max_p ( load_p / r^k + tau_p * delta )
+over all ingress rows and egress columns p of D.
+
+Global lower bound (Eq. 2 / Lemma 1):
+    T_LB(D) = delta + rho(D) / R.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .coflow import col_loads, rho, row_loads
+
+__all__ = ["per_core_lb", "global_lb", "CoreState"]
+
+
+def per_core_lb(D: np.ndarray, rate: float, delta: float) -> float:
+    """T_LB^k of a demand matrix on a core with per-port rate ``rate`` (Eq. 1)."""
+    D = np.asarray(D, dtype=np.float64)
+    if D.size == 0 or not (D > 0).any():
+        return 0.0
+    nz = D > 0
+    li = row_loads(D) / rate + nz.sum(axis=1) * delta
+    lj = col_loads(D) / rate + nz.sum(axis=0) * delta
+    return float(max(li.max(), lj.max()))
+
+
+def global_lb(D: np.ndarray, R: float, delta: float) -> float:
+    """Assignment-independent global lower bound T_LB(D) = delta + rho/R (Lemma 1)."""
+    D = np.asarray(D, dtype=np.float64)
+    if D.size == 0 or not (D > 0).any():
+        return 0.0
+    return float(delta + rho(D) / R)
+
+
+@dataclasses.dataclass
+class CoreState:
+    """Incremental prefix state for the assignment phase (Alg. 1 lines 5-17).
+
+    Tracks, per core k: row/col loads and tau counts of the prefix matrix
+    ``D^k_{1:m}``, the nonzero mask (tau increments only on first traffic for a
+    given (i, j) on that core), and the running per-core bound
+    ``T_LB^k(D^k_{1:m})``. The candidate evaluation for a flow (i, j, d) is
+    O(1) per core because only row i and column j change — and they only grow,
+    so the new bound is ``max(old_bound, new_L_i, new_L_j)``.
+    """
+
+    K: int
+    N: int
+    rates: np.ndarray
+    delta: float
+    row_load: np.ndarray = dataclasses.field(init=False)  # (K, N)
+    col_load: np.ndarray = dataclasses.field(init=False)  # (K, N)
+    row_tau: np.ndarray = dataclasses.field(init=False)   # (K, N) int64
+    col_tau: np.ndarray = dataclasses.field(init=False)   # (K, N) int64
+    nz: np.ndarray = dataclasses.field(init=False)        # (K, N, N) bool
+    bound: np.ndarray = dataclasses.field(init=False)     # (K,) current T_LB^k
+
+    def __post_init__(self) -> None:
+        self.rates = np.asarray(self.rates, dtype=np.float64)
+        self.row_load = np.zeros((self.K, self.N))
+        self.col_load = np.zeros((self.K, self.N))
+        self.row_tau = np.zeros((self.K, self.N), dtype=np.int64)
+        self.col_tau = np.zeros((self.K, self.N), dtype=np.int64)
+        self.nz = np.zeros((self.K, self.N, self.N), dtype=bool)
+        self.bound = np.zeros(self.K)
+
+    def candidate_bounds(self, i: int, j: int, d: float) -> np.ndarray:
+        """T_LB^k(D^k_{1:m} ⊕ d) for every core k, vectorized over k."""
+        new_entry = ~self.nz[:, i, j]
+        li = (self.row_load[:, i] + d) / self.rates + (self.row_tau[:, i] + new_entry) * self.delta
+        lj = (self.col_load[:, j] + d) / self.rates + (self.col_tau[:, j] + new_entry) * self.delta
+        return np.maximum(self.bound, np.maximum(li, lj))
+
+    def candidate_rho_bounds(self, i: int, j: int, d: float) -> np.ndarray:
+        """rho^k_{1:m}(after ⊕ d)/r^k for every core — the tau-blind RHO-ASSIGN metric."""
+        li = self.row_load[:, i] + d
+        lj = self.col_load[:, j] + d
+        cur = np.maximum(self.row_load.max(axis=1), self.col_load.max(axis=1))
+        return np.maximum(cur, np.maximum(li, lj)) / self.rates
+
+    def assign(self, i: int, j: int, d: float, k: int) -> None:
+        """Commit flow (i, j, d) to core k and refresh incremental state."""
+        if not self.nz[k, i, j]:
+            self.nz[k, i, j] = True
+            self.row_tau[k, i] += 1
+            self.col_tau[k, j] += 1
+        self.row_load[k, i] += d
+        self.col_load[k, j] += d
+        li = self.row_load[k, i] / self.rates[k] + self.row_tau[k, i] * self.delta
+        lj = self.col_load[k, j] / self.rates[k] + self.col_tau[k, j] * self.delta
+        self.bound[k] = max(self.bound[k], li, lj)
+
+    def max_bound(self) -> float:
+        return float(self.bound.max())

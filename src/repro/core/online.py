@@ -1,0 +1,121 @@
+"""Online extension: coflows with release (arrival) times — the paper's
+stated future-work direction (§VI), built on the same per-core machinery.
+
+Model: coflow C_m becomes known at ``release_m``; nothing of it may be
+assigned or scheduled earlier (clairvoyance only of arrived coflows, as in
+the standard online coflow model). We implement an event-driven online
+scheduler:
+
+  - on each arrival, the new coflow is ordered among the *pending* (arrived,
+    unfinished) coflows by the paper's WSPT score w_m / T_LB(D_m);
+  - its flows are assigned to cores by the same tau-aware greedy rule,
+    against the *current* prefix state (assignment is irrevocable — matching
+    the offline algorithm's per-flow commitment);
+  - each core's circuit scheduler is the not-all-stop list scheduler, with
+    flow eligibility gated on release times (a flow may establish only at or
+    after its coflow's release).
+
+The offline Algorithm 1 on the same instance with all releases forced to 0
+lower-bounds what any online policy could see, so the benchmark reports the
+"price of arrival" ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .assignment import AssignedFlow
+from .coflow import Coflow, Instance, nonzero_flows
+from .lower_bounds import CoreState, global_lb
+from .scheduler import Schedule
+from .circuit_scheduler import ScheduledFlow
+
+__all__ = ["OnlineInstance", "run_online"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineInstance:
+    inst: Instance
+    releases: np.ndarray  # (M,) float64 >= 0
+
+
+def run_online(oinst: OnlineInstance) -> Schedule:
+    """Online tau-aware scheduling with arrivals. Returns a Schedule whose
+    feasibility (incl. release-time respect) is validated in tests."""
+    inst = oinst.inst
+    rel = np.asarray(oinst.releases, dtype=np.float64)
+    assert len(rel) == inst.M
+
+    # --- assignment at arrival, WSPT order among same-time arrivals --------
+    order = np.lexsort((
+        [-global_lb(c.demand, inst.R, inst.delta) for c in inst.coflows],
+        [-(c.weight / max(global_lb(c.demand, inst.R, inst.delta), 1e-12))
+         for c in inst.coflows],
+        rel,
+    ))
+    state = CoreState(K=inst.K, N=inst.N, rates=inst.rates, delta=inst.delta)
+    per_coflow: list[list[AssignedFlow]] = [None] * inst.M  # type: ignore
+    for pos, ci in enumerate(order):
+        c = inst.coflows[int(ci)]
+        flows = nonzero_flows(c, order_pos=pos, largest_first=True)
+        placed = []
+        for f in flows:
+            cand = state.candidate_bounds(f.i, f.j, f.size)
+            k = int(np.argmin(cand))
+            state.assign(f.i, f.j, f.size, k)
+            placed.append(AssignedFlow(flow=f, core=k))
+        per_coflow[pos] = placed
+
+    # --- per-core event-driven list scheduling with release gating ---------
+    all_scheduled: list[ScheduledFlow] = []
+    # priority of a coflow position = its index in `order` (WSPT at arrival)
+    release_of_pos = rel[order]
+    for k in range(inst.K):
+        flows = [(pos, af) for pos, per in enumerate(per_coflow)
+                 for af in per if af.core == k]
+        flows.sort(key=lambda t: t[0])
+        F = len(flows)
+        rate = float(inst.rates[k])
+        free_in = np.zeros(inst.N)
+        free_out = np.zeros(inst.N)
+        done = np.zeros(F, dtype=bool)
+        events = sorted({0.0, *release_of_pos.tolist()})
+        heapq.heapify(events)
+        seen = set(events)
+        remaining = F
+        while remaining:
+            if not events:
+                raise RuntimeError("online scheduler deadlock")
+            t = heapq.heappop(events)
+            while events and events[0] == t:
+                heapq.heappop(events)
+            for idx, (pos, af) in enumerate(flows):
+                if done[idx] or release_of_pos[pos] > t + 1e-12:
+                    continue
+                i, j = af.flow.i, af.flow.j
+                if free_in[i] <= t and free_out[j] <= t:
+                    tc = t + inst.delta + af.flow.size / rate
+                    free_in[i] = tc
+                    free_out[j] = tc
+                    done[idx] = True
+                    remaining -= 1
+                    all_scheduled.append(ScheduledFlow(
+                        coflow=pos, cid=af.flow.cid, i=i, j=j, core=k,
+                        size=af.flow.size, t_establish=t, t_start=t + inst.delta,
+                        t_complete=tc))
+                    if tc not in seen:
+                        seen.add(tc)
+                        heapq.heappush(events, tc)
+
+    ccts = np.zeros(inst.M)
+    for f in all_scheduled:
+        orig = int(order[f.coflow])
+        ccts[orig] = max(ccts[orig], f.t_complete)
+
+    from .assignment import Assignment
+
+    a = Assignment(inst=inst, pi=order, flows=per_coflow, state=state)
+    return Schedule(inst=inst, pi=order, assignment=a, flows=all_scheduled,
+                    ccts=ccts)

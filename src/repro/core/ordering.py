@@ -1,0 +1,26 @@
+"""Global coflow ordering (Alg. 1 lines 1-4): WSPT on the global lower bound."""
+from __future__ import annotations
+
+import numpy as np
+
+from .coflow import Instance
+from .lower_bounds import global_lb
+
+__all__ = ["order_coflows", "priority_scores"]
+
+
+def priority_scores(inst: Instance) -> np.ndarray:
+    """s_m = w_m / T_LB(D_m), with T_LB(D_m) = delta + rho_m / R."""
+    lbs = np.array([global_lb(c.demand, inst.R, inst.delta) for c in inst.coflows])
+    # An all-zero coflow has LB 0; it completes instantly — give it +inf priority.
+    with np.errstate(divide="ignore"):
+        return np.where(lbs > 0, inst.weights / np.maximum(lbs, 1e-300), np.inf)
+
+
+def order_coflows(inst: Instance) -> np.ndarray:
+    """Permutation pi: indices of coflows in non-increasing score order.
+
+    Deterministic tie-break by original index (stable sort on -score).
+    """
+    s = priority_scores(inst)
+    return np.argsort(-s, kind="stable")

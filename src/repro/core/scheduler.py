@@ -1,0 +1,130 @@
+"""Top-level multi-core coflow scheduling pipelines (OURS + the 4 baselines)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .assignment import Assignment, assign_random, assign_rho_only, assign_tau_aware
+from .circuit_scheduler import (
+    ScheduledFlow,
+    schedule_core_list,
+    schedule_core_reserving,
+    schedule_core_sunflow,
+)
+from .coflow import Instance
+from .ordering import order_coflows
+
+__all__ = ["Schedule", "run", "ALGORITHMS", "weighted_cct", "tail_cct"]
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A complete feasible schedule plus derived metrics."""
+
+    inst: Instance
+    pi: np.ndarray
+    assignment: Assignment
+    flows: list[ScheduledFlow]           # all cores
+    ccts: np.ndarray                     # (M,) indexed by ORIGINAL coflow id order
+
+    @property
+    def total_weighted_cct(self) -> float:
+        return float((self.inst.weights * self.ccts).sum())
+
+    @property
+    def total_cct(self) -> float:
+        return float(self.ccts.sum())
+
+    def per_core_flows(self) -> dict[int, list[ScheduledFlow]]:
+        out: dict[int, list[ScheduledFlow]] = {k: [] for k in range(self.inst.K)}
+        for f in self.flows:
+            out[f.core].append(f)
+        return out
+
+
+def _schedule_from_assignment(
+    inst: Instance,
+    pi: np.ndarray,
+    assignment: Assignment,
+    percore: Callable,
+) -> Schedule:
+    # Split assigned flows by core, preserving global priority order
+    # (coflow position in pi, then the intra-coflow assignment order).
+    per_core: list[list] = [[] for _ in range(inst.K)]
+    for coflow_flows in assignment.flows:
+        for af in coflow_flows:
+            per_core[af.core].append(af)
+    all_scheduled: list[ScheduledFlow] = []
+    for k in range(inst.K):
+        all_scheduled.extend(
+            percore(per_core[k], k, float(inst.rates[k]), inst.delta, inst.N)
+        )
+    ccts = np.zeros(inst.M)
+    for f in all_scheduled:
+        orig = int(pi[f.coflow])
+        ccts[orig] = max(ccts[orig], f.t_complete)
+    return Schedule(inst=inst, pi=pi, assignment=assignment, flows=all_scheduled, ccts=ccts)
+
+
+def run(
+    inst: Instance,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    scheduling: str = "work-conserving",
+) -> Schedule:
+    """Run one of the named algorithms end to end.
+
+    ``ours``          : Alg. 1 (tau-aware assignment + work-conserving list scheduling)
+    ``rho-assign``    : tau-blind assignment, same ordering/scheduling
+    ``rand-assign``   : rate-proportional random assignment, same ordering/scheduling
+    ``sunflow-core``  : Alg. 1 assignment, Sunflow per-core scheduling
+    ``rand-sunflow``  : random assignment + Sunflow per-core scheduling
+
+    ``scheduling`` selects the intra-core policy for the first three:
+    ``work-conserving`` — Alg. 1 lines 23-31 literally: flows scanned in pi
+        order, any flow whose two ports are idle starts (default);
+    ``priority-guard``  — pending higher-priority flows protect their port
+        pairs from lower-priority backfill;
+    ``reserving``       — strict in-order reservation, no backfill.
+    All three are kept for the reproduction sensitivity study (see
+    EXPERIMENTS.md §Reproduction-notes on Lemma 3).
+    """
+    from functools import partial
+
+    percore = {
+        "work-conserving": schedule_core_list,
+        "priority-guard": partial(schedule_core_list, guard=True),
+        "reserving": schedule_core_reserving,
+    }[scheduling]
+    pi = order_coflows(inst)
+    if algorithm == "ours":
+        a = assign_tau_aware(inst, pi)
+        return _schedule_from_assignment(inst, pi, a, percore)
+    if algorithm == "rho-assign":
+        a = assign_rho_only(inst, pi)
+        return _schedule_from_assignment(inst, pi, a, percore)
+    if algorithm == "rand-assign":
+        a = assign_random(inst, pi, seed=seed)
+        return _schedule_from_assignment(inst, pi, a, percore)
+    if algorithm == "sunflow-core":
+        a = assign_tau_aware(inst, pi)
+        return _schedule_from_assignment(inst, pi, a, schedule_core_sunflow)
+    if algorithm == "rand-sunflow":
+        a = assign_random(inst, pi, seed=seed)
+        return _schedule_from_assignment(inst, pi, a, schedule_core_sunflow)
+    raise ValueError(f"unknown algorithm {algorithm!r}; one of {sorted(ALGORITHMS)}")
+
+
+ALGORITHMS = ("ours", "rho-assign", "rand-assign", "sunflow-core", "rand-sunflow")
+
+
+def weighted_cct(s: Schedule) -> float:
+    return s.total_weighted_cct
+
+
+def tail_cct(s: Schedule, q: float) -> float:
+    """p-quantile of per-coflow CCTs (e.g. q=0.95 / 0.99 for the paper's tails)."""
+    return float(np.quantile(s.ccts, q))

@@ -1,0 +1,161 @@
+"""Fault tolerance & elasticity for the training loop.
+
+Production model (1000+ nodes): hardware failures are routine; the loop
+must (a) checkpoint continuously (async, see checkpoint.py), (b) detect
+stragglers/hangs, and (c) on device loss rebuild the mesh from survivors and
+continue from the last checkpoint with resharded state (elastic shrink), or
+grow back when capacity returns.
+
+On this single-process container failures are *injected* (exception hooks,
+artificial step delays); the supervisor logic — watchdog, re-mesh, restore,
+per-device batch rescale — is the same code a multi-host deployment runs,
+with `jax.devices()` standing in for the surviving-host set.
+
+Components:
+  StepWatchdog      wall-clock watchdog; flags steps slower than
+                    ``factor`` x rolling median (straggler mitigation —
+                    triggers the backup-step/requeue hook).
+  ElasticTrainer    drives train steps; on DeviceLoss (injected or real)
+                    rebuilds a smaller mesh, replans shardings, restores the
+                    last checkpoint onto it, rescales per-device batch, and
+                    resumes. ``grow()`` does the inverse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["DeviceLoss", "StepWatchdog", "ElasticTrainer"]
+
+
+class DeviceLoss(RuntimeError):
+    """Raised (or injected) when devices drop out of the cluster."""
+
+    def __init__(self, lost: int = 1):
+        super().__init__(f"lost {lost} device(s)")
+        self.lost = lost
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    """Flags straggler steps: wall time > factor x rolling median."""
+
+    factor: float = 3.0
+    window: int = 32
+    min_samples: int = 5
+    on_straggler: Callable[[int, float, float], None] | None = None
+    _times: deque = dataclasses.field(default_factory=lambda: deque(maxlen=32))
+    stragglers: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        is_straggler = False
+        if len(self._times) >= self.min_samples:
+            med = float(np.median(self._times))
+            if seconds > self.factor * med:
+                is_straggler = True
+                self.stragglers.append((step, seconds, med))
+                if self.on_straggler:
+                    self.on_straggler(step, seconds, med)
+        self._times.append(seconds)
+        return is_straggler
+
+
+class ElasticTrainer:
+    """Train-loop supervisor with checkpoint/restart and elastic re-meshing.
+
+    ``build`` is a callback (mesh) -> (step_fn, make_state, shardings_of)
+    so the trainer can re-plan for any surviving mesh:
+      step_fn(state, batch) -> (state, metrics)
+      make_state()          -> fresh state pytree (on that mesh)
+      shardings_of(state)   -> matching NamedSharding tree (for restore)
+    """
+
+    def __init__(self, build: Callable, meshes: list, ckpt_dir: str,
+                 *, ckpt_every: int = 10, watchdog: StepWatchdog | None = None):
+        from repro.distributed.checkpoint import AsyncCheckpointer
+
+        self.build = build
+        self.meshes = meshes  # ordered largest -> smallest fallback chain
+        self.mesh_idx = 0
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.watchdog = watchdog or StepWatchdog()
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.events: list[dict] = []
+        self._setup()
+
+    @property
+    def mesh(self):
+        return self.meshes[self.mesh_idx]
+
+    def _setup(self):
+        self.step_fn, self.make_state, self.shardings_of = self.build(self.mesh)
+
+    def _restore_or_init(self, step_hint: int | None = None):
+        from repro.distributed.checkpoint import latest_step, restore_checkpoint
+
+        state = self.make_state()
+        last = latest_step(self.ckpt_dir)
+        if last is None:
+            return state, 0
+        shardings = self.shardings_of(state)
+        state = restore_checkpoint(self.ckpt_dir, last, state, shardings)
+        return state, last
+
+    def shrink(self):
+        """Drop to the next-smaller mesh in the fallback chain."""
+        if self.mesh_idx + 1 >= len(self.meshes):
+            raise RuntimeError("no smaller mesh available — cluster lost")
+        self.mesh_idx += 1
+        self.events.append({"event": "shrink", "to": dict(self.mesh.shape)})
+        self._setup()
+
+    def grow(self):
+        if self.mesh_idx > 0:
+            self.mesh_idx -= 1
+            self.events.append({"event": "grow", "to": dict(self.mesh.shape)})
+            self._setup()
+
+    def run(self, batches, *, start_state=None, max_steps: int | None = None,
+            inject: Callable[[int], None] | None = None):
+        """Drive steps over ``batches`` (iterable of pytrees). Returns
+        (final_state, step, metrics_history). ``inject(step)`` may raise
+        DeviceLoss to simulate failures.
+        """
+        if start_state is None:
+            state, step = self._restore_or_init()
+        else:
+            state, step = start_state, 0
+        history = []
+        it = iter(batches)
+        while True:
+            if max_steps is not None and step >= max_steps:
+                break
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            try:
+                if inject is not None:
+                    inject(step)
+                t0 = time.time()
+                state, metrics = self.step_fn(state, batch)
+                dt = time.time() - t0
+                self.watchdog.observe(step, dt)
+                step += 1
+                history.append({k: float(v) for k, v in metrics.items()})
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+            except DeviceLoss as e:
+                self.events.append({"event": "device-loss", "step": step,
+                                    "lost": e.lost})
+                self.shrink()
+                state, step = self._restore_or_init()
+        return state, step, history

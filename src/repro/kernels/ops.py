@@ -1,0 +1,55 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On this CPU container kernels execute in interpret mode (set
+``REPRO_PALLAS_INTERPRET=1``, which the test-suite does); on real TPU the
+same calls compile to Mosaic. The wrapper signatures match the XLA reference
+paths so models can switch implementation per-config.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.coflow_assign import coflow_assign_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+
+__all__ = ["flash_attention", "coflow_assign"]
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softmax_scale=None,
+                    q_positions=None, kv_positions=None, kv_valid=None,
+                    block_q=512, block_k=512):
+    """Self-attention flash kernel (q_len == kv_len, positions implicit).
+
+    The cache-aware arguments (q_positions/kv_positions/kv_valid) are only
+    used by the XLA path; the kernel covers the train/prefill self-attention
+    hot spot where positions are the trivial iota.
+    """
+    del q_positions, kv_positions, kv_valid
+    sq = q.shape[1]
+    bq = min(block_q, sq)
+    while sq % bq:
+        bq //= 2
+    sk = k.shape[1]
+    bk = min(block_k, sk)
+    while sk % bk:
+        bk //= 2
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softmax_scale=softmax_scale,
+        block_q=max(bq, 1), block_k=max(bk, 1), interpret=_interpret())
+
+
+def coflow_assign(fi, fj, sizes, rates, delta, *, n_ports, block_f=256):
+    """Tau-aware greedy assignment; returns per-flow core choices (F,) int32."""
+    return coflow_assign_fwd(
+        jnp.asarray(fi, jnp.int32), jnp.asarray(fj, jnp.int32),
+        jnp.asarray(sizes, jnp.float32), jnp.asarray(rates, jnp.float32),
+        float(delta), n_ports=n_ports, block_f=block_f, interpret=_interpret())

@@ -1,0 +1,81 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref", "assign_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Sk, KVH, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    """Reference GQA attention (fp32 softmax), mirrors models.attention.attend_xla."""
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    rep = h // kvh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def assign_ref(
+    fi: np.ndarray,  # (F,) ingress ports, in global flow order
+    fj: np.ndarray,  # (F,) egress ports
+    sizes: np.ndarray,  # (F,)
+    rates: np.ndarray,  # (K,)
+    delta: float,
+    n_ports: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Oracle for the tau-aware greedy assignment (Alg. 1 lines 5-17).
+
+    Returns (choices (F,) int32, final per-core bounds (K,)).
+    Mirrors repro.core.lower_bounds.CoreState exactly (argmin ties -> lowest k).
+    """
+    K = len(rates)
+    row_load = np.zeros((K, n_ports))
+    col_load = np.zeros((K, n_ports))
+    row_tau = np.zeros((K, n_ports))
+    col_tau = np.zeros((K, n_ports))
+    nz = np.zeros((K, n_ports, n_ports), bool)
+    bound = np.zeros(K)
+    choices = np.zeros(len(fi), np.int32)
+    for t in range(len(fi)):
+        i, j, d = int(fi[t]), int(fj[t]), float(sizes[t])
+        new = ~nz[:, i, j]
+        li = (row_load[:, i] + d) / rates + (row_tau[:, i] + new) * delta
+        lj = (col_load[:, j] + d) / rates + (col_tau[:, j] + new) * delta
+        cand = np.maximum(bound, np.maximum(li, lj))
+        kstar = int(np.argmin(cand))
+        choices[t] = kstar
+        if not nz[kstar, i, j]:
+            nz[kstar, i, j] = True
+            row_tau[kstar, i] += 1
+            col_tau[kstar, j] += 1
+        row_load[kstar, i] += d
+        col_load[kstar, j] += d
+        li_k = row_load[kstar, i] / rates[kstar] + row_tau[kstar, i] * delta
+        lj_k = col_load[kstar, j] / rates[kstar] + col_tau[kstar, j] * delta
+        bound[kstar] = max(bound[kstar], li_k, lj_k)
+    return choices, bound

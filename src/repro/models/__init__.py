@@ -1,0 +1,2 @@
+"""Model zoo: composable pure-JAX implementations of the assigned families."""
+from .api import ModelConfig, build_model  # noqa: F401

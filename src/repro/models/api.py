@@ -1,0 +1,107 @@
+"""Model zoo public API: config dataclass + the Model protocol.
+
+Every architecture family implements :class:`Model`:
+
+  init(key)                      -> (params, logical_axes_tree)
+  loss(params, batch)            -> scalar fp32 mean CE
+  prefill(params, caches, batch) -> (last_logits, caches)
+  decode_step(params, caches, tokens) -> (logits, caches)
+  make_caches(batch, s_max, abstract=...) -> cache pytree (or None)
+
+``batch`` is a dict of arrays (see each family's docstring);
+``abstract`` paths build ShapeDtypeStructs only (dry-run: no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_fraction: float = 1.0
+    rope_base: float = 10000.0
+    norm: str = "rms"  # rms | layer
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_ep: bool = True  # expert-parallel all-to-all path when a mesh is present
+    # --- hybrid / recurrent ---
+    block_pattern: tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+    pattern_tail: tuple[str, ...] = ()  # trailing layers not covered by the pattern
+    window: int = 0  # local attention window (0 = full)
+    conv_width: int = 4  # temporal conv in recurrent blocks
+    rnn_state_dim: int = 0  # RG-LRU recurrent width (0 -> d_model)
+    # --- xlstm ---
+    slstm_period: int = 0  # one sLSTM block per this many layers (0 = all mLSTM)
+    mlstm_proj_factor: float = 2.0
+    # --- enc-dec ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # --- modality frontends (STUBS: input_specs provides embeddings) ---
+    n_prefix_tokens: int = 0  # vlm: vision patch embeddings prepended
+    frontend: str = ""  # "vision" | "audio" | ""
+    # --- execution ---
+    attention_impl: str = "xla"  # "xla" | "pallas"
+    vocab_pad_to: int = 0  # pad embedding rows for clean TP (logits masked)
+    scan_layers: bool = True
+    remat_policy: str = "none"  # "none" | "full" | "dots" (per-layer activation ckpt)
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return max(self.vocab, self.vocab_pad_to)
+
+    @property
+    def full_attention(self) -> bool:
+        """True when every token attends over the entire unbounded context."""
+        if self.family in ("ssm",):
+            return False
+        if self.family == "hybrid":
+            return False  # bounded local window + recurrent state
+        return True
+
+
+def build_model(cfg: ModelConfig):
+    """Instantiate the family implementation for a config."""
+    if cfg.family in ("dense", "vlm"):
+        from .dense import DenseLM
+
+        return DenseLM(cfg)
+    if cfg.family == "moe":
+        from .moe import MoELM
+
+        return MoELM(cfg)
+    if cfg.family == "ssm":
+        from .xlstm import XLSTMLM
+
+        return XLSTMLM(cfg)
+    if cfg.family == "hybrid":
+        from .rglru import GriffinLM
+
+        return GriffinLM(cfg)
+    if cfg.family == "audio":
+        from .encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

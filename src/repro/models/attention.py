@@ -1,0 +1,311 @@
+"""Grouped-query attention with causal/local masking and KV caches.
+
+Two interchangeable implementations:
+  - ``impl="xla"``   : einsum + fp32 softmax (default; used by smoke tests,
+    the dry-run, and as the oracle).
+  - ``impl="pallas"``: blocked flash-attention TPU kernel
+    (:mod:`repro.kernels.flash_attention`), selected per-config for the TPU
+    target and validated in interpret mode against the xla path.
+
+Shapes follow the (B, S, H, Dh) convention throughout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KVH, Dh) -> (B, S, KVH*n_rep, Dh) by head replication (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, kvh, dh = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvh, n_rep, dh))
+    return k.reshape(b, s, kvh * n_rep, dh)
+
+
+def attend_xla(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Sk, KVH, Dh)
+    v: jax.Array,  # (B, Sk, KVH, Dh)
+    *,
+    causal: bool,
+    q_positions: jax.Array | None = None,  # (B, Sq) absolute positions of queries
+    kv_positions: jax.Array | None = None,  # (B, Sk) absolute positions of keys
+    window: int | None = None,  # local attention window (keys within [q-w, q])
+    kv_valid: jax.Array | None = None,  # (B, Sk) bool — cache slots holding data
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    """Reference attention. Returns (B, Sq, H, Dh) in q.dtype."""
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    k = _repeat_kv(k, h // kvh)
+    v = _repeat_kv(v, h // kvh)
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+
+    mask = jnp.ones((b, 1, sq, sk), dtype=bool)
+    if causal or window is not None:
+        if q_positions is None:
+            q_positions = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq))
+        if kv_positions is None:
+            kv_positions = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32), (b, sk))
+        qp = q_positions[:, None, :, None]
+        kp = kv_positions[:, None, None, :]
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, None, :]
+
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attend(
+    q, k, v, *, impl: str = "xla", **kw
+) -> jax.Array:
+    if impl == "xla":
+        return attend_xla(q, k, v, **kw)
+    if impl == "chunked":
+        # flash-attention algorithm in pure XLA (see attend_chunked); falls
+        # back to the reference path for cached/decode calls (tiny Sq) and
+        # non-self-attention shapes.
+        if (kw.get("kv_valid") is None and q.shape[1] == k.shape[1]
+                and q.shape[1] >= 2048 and _pick_chunk(k.shape[1])):
+            return attend_chunked(
+                q, k, v, causal=kw.get("causal", True),
+                window=kw.get("window"),
+                softmax_scale=kw.get("softmax_scale"))
+        return attend_xla(q, k, v, **kw)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(q, k, v, **kw)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-algorithm) attention in pure XLA — beyond-paper optimization
+# ---------------------------------------------------------------------------
+# The roofline analysis (EXPERIMENTS.md §Perf) shows every train/prefill cell
+# memory-bound on the materialized (B,H,Sq,Sk) score tensor. This implements
+# the flash-attention streaming algorithm with jnp + lax.scan so it (a) lowers
+# under pjit for the dry-run and (b) matches what the Pallas kernel does on
+# real TPU. A custom VJP recomputes per-chunk in the backward pass (carrying
+# only dq), so neither pass materializes more than one (B,H,Sq,CHUNK) block.
+
+CHUNK_KV = 1024
+
+
+def _chunk_mask(qp, kp, causal, window):
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    return m
+
+
+def _chunked_fwd(q, k, v, scale, causal, window, chunk):
+    """Returns (out, lse). q: (B,Sq,H,Dh); k/v already head-repeated."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    nc = sk // chunk
+    qf = q.astype(jnp.float32) * scale
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, h, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, h, dh), 1, 0)
+    qpos = jnp.arange(sq, dtype=jnp.int32)[:, None]
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        ci, kk, vv = xs
+        kpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kk.astype(jnp.float32))
+        s = jnp.where(_chunk_mask(qpos, kpos, causal, window)[None, None], s,
+                      NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = alpha * l_run + jnp.sum(p, axis=-1)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nc, dtype=jnp.int32), kc, vc))
+    safe = jnp.where(l_f == 0, 1.0, l_f)
+    out = acc / safe.transpose(0, 2, 1)[..., None]
+    lse = m_f + jnp.log(safe)  # (B,H,Sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _chunked_attn(q, k, v, scale, causal, window, chunk):
+    out, _ = _chunked_fwd(q, k, v, scale, causal, window, chunk)
+    return out.astype(q.dtype)
+
+
+def _chunked_attn_fwd_rule(q, k, v, scale, causal, window, chunk):
+    out, lse = _chunked_fwd(q, k, v, scale, causal, window, chunk)
+    return out.astype(q.dtype), (q, k, v, out, lse)
+
+
+def _chunked_attn_bwd_rule(scale, causal, window, chunk, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    nc = sk // chunk
+    qf = q.astype(jnp.float32) * scale
+    do = dout.astype(jnp.float32)
+    delta = jnp.einsum("bqhd,bqhd->bhq", do, out)  # rowsum(dout*out)
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, h, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, h, dh), 1, 0)
+    qpos = jnp.arange(sq, dtype=jnp.int32)[:, None]
+
+    def body(dq_acc, xs):
+        ci, kk, vv = xs
+        kpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kk.astype(jnp.float32))
+        s = jnp.where(_chunk_mask(qpos, kpos, causal, window)[None, None], s,
+                      NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (B,H,Sq,Ck)
+        dv = jnp.einsum("bhqk,bqhd->bkhd", p, do)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", do, vv.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                                     kk.astype(jnp.float32)) * scale
+        dk = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        body, dq0, (jnp.arange(nc, dtype=jnp.int32), kc, vc))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, sk, h, dh)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, sk, h, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_chunked_attn.defvjp(_chunked_attn_fwd_rule, _chunked_attn_bwd_rule)
+
+
+def _pick_chunk(sk: int) -> int:
+    for c in (CHUNK_KV, 512, 256, 128, 64):
+        if sk % c == 0:
+            return c
+    return 0
+
+
+def attend_chunked(q, k, v, *, causal=True, window=None, softmax_scale=None):
+    """Streaming self-attention (positions = iota). Returns (B,Sq,H,Dh)."""
+    h, kvh = q.shape[2], k.shape[2]
+    k = _repeat_kv(k, h // kvh)
+    v = _repeat_kv(v, h // kvh)
+    scale = softmax_scale if softmax_scale is not None else q.shape[-1] ** -0.5
+    chunk = _pick_chunk(k.shape[1])
+    return _chunked_attn(q, k, v, scale, causal, window, chunk)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Ring-less preallocated KV cache for autoregressive decoding.
+
+    ``k``/``v`` are (L, B, S_max, KVH, Dh); ``length`` (B,) counts filled slots.
+    For local-attention layers ``S_max`` may be the window size instead of the
+    full sequence (bounded cache), in which case writes wrap modulo S_max and
+    ``positions`` tracks the absolute position of every slot.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # (B,) int32 — number of tokens already cached
+    positions: jax.Array  # (B, S_max) int32 — absolute position per slot (-1 empty)
+
+    @property
+    def s_max(self) -> int:
+        return self.k.shape[2]
+
+
+def kv_cache_init(
+    n_layers: int, batch: int, s_max: int, kv_heads: int, head_dim: int, dtype=jnp.bfloat16
+) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((n_layers, batch, s_max, kv_heads, head_dim), dtype),
+        v=jnp.zeros((n_layers, batch, s_max, kv_heads, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+        positions=jnp.full((batch, s_max), -1, jnp.int32),
+    )
+
+
+def kv_cache_abstract(
+    n_layers: int, batch: int, s_max: int, kv_heads: int, head_dim: int, dtype=jnp.bfloat16
+) -> KVCache:
+    """ShapeDtypeStruct stand-in (dry-run: no allocation)."""
+    f = jax.ShapeDtypeStruct
+    return KVCache(
+        k=f((n_layers, batch, s_max, kv_heads, head_dim), dtype),
+        v=f((n_layers, batch, s_max, kv_heads, head_dim), dtype),
+        length=f((batch,), jnp.int32),
+        positions=f((batch, s_max), jnp.int32),
+    )
+
+
+def kv_cache_layer_update(
+    layer_k: jax.Array,  # (B, S_max, KVH, Dh) existing cache for one layer
+    layer_v: jax.Array,
+    new_k: jax.Array,  # (B, Sq, KVH, Dh)
+    new_v: jax.Array,
+    start: jax.Array,  # (B,) int32 write offset (== length before write)
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter ``Sq`` new entries at ``start`` (wrapping modulo S_max).
+
+    When ``Sq >= S_max`` (bounded window caches) only the trailing ``S_max``
+    entries are written — earlier ones would be overwritten anyway, and a
+    single write per slot keeps the scatter deterministic.
+    """
+    s_max = layer_k.shape[1]
+    sq = new_k.shape[1]
+    if sq >= s_max:
+        drop = sq - s_max
+        new_k, new_v = new_k[:, drop:], new_v[:, drop:]
+        start = start + drop
+        sq = s_max
+    slot = (start[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]) % s_max  # (B, Sq)
+    bidx = jnp.arange(layer_k.shape[0], dtype=jnp.int32)[:, None]
+    k = layer_k.at[bidx, slot].set(new_k)
+    v = layer_v.at[bidx, slot].set(new_v)
+    return k, v
+
+
+def kv_cache_slot_positions(
+    positions: jax.Array,  # (B, S_max)
+    q_positions: jax.Array,  # (B, Sq) absolute positions being written
+    start: jax.Array,  # (B,)
+) -> jax.Array:
+    s_max = positions.shape[1]
+    sq = q_positions.shape[1]
+    if sq >= s_max:
+        drop = sq - s_max
+        q_positions = q_positions[:, drop:]
+        start = start + drop
+        sq = s_max
+    slot = (start[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]) % s_max
+    bidx = jnp.arange(positions.shape[0], dtype=jnp.int32)[:, None]
+    return positions.at[bidx, slot].set(q_positions)

@@ -1,0 +1,256 @@
+"""Shared neural building blocks for the model zoo (pure JAX, from scratch).
+
+Conventions used across the zoo:
+  - Parameters are nested dicts of jnp arrays; a *parallel* tree of logical-axis
+    tuples (strings or None per dim) is produced alongside by every ``init``
+    (see :mod:`repro.distributed.sharding` for the logical -> mesh mapping).
+  - Layer stacks are weight-stacked with a leading ``layers`` dim and executed
+    with ``jax.lax.scan`` so HLO size / compile time stay O(1) in depth.
+  - Compute dtype is bf16, params bf16 (fp32 master copies live in the
+    optimizer), softmax/norm statistics in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Param/axes tree helpers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamFactory:
+    """Collects (init_fn, logical_axes) pairs so a model definition can emit
+    the parameter tree and the logical-axes tree from the same source of truth.
+
+    ``key=None`` switches to abstract mode: every method returns
+    ShapeDtypeStructs instead of arrays (the dry-run path — no allocation).
+    """
+
+    key: jax.Array | None
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def abstract(self) -> bool:
+        return self.key is None
+
+    def _next_key(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, shape, axes, *, scale: float | None = None, dtype=None):
+        """Truncated-normal initialized weight. ``axes`` names every dim."""
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype or self.dtype), tuple(axes)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+        w = jax.random.truncated_normal(
+            self._next_key(), -2.0, 2.0, shape, jnp.float32
+        ) * std
+        return w.astype(dtype or self.dtype), tuple(axes)
+
+    def zeros(self, shape, axes, *, dtype=None):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype or self.dtype), tuple(axes)
+        return jnp.zeros(shape, dtype or self.dtype), tuple(axes)
+
+    def ones(self, shape, axes, *, dtype=None):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype or self.dtype), tuple(axes)
+        return jnp.ones(shape, dtype or self.dtype), tuple(axes)
+
+    def value(self, arr, axes):
+        arr = jnp.asarray(arr)
+        assert arr.ndim == len(axes), (arr.shape, axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(arr.shape, arr.dtype), tuple(axes)
+        return arr, tuple(axes)
+
+
+def split_tree(tree_of_pairs: PyTree) -> tuple[PyTree, PyTree]:
+    """Split a tree whose leaves are (array, axes) into (params, axes_tree)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        tree_of_pairs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and (isinstance(x[1], tuple))
+    )
+    params = treedef.unflatten([a for a, _ in leaves])
+    axes = treedef.unflatten([ax for _, ax in leaves])
+    return params, axes
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full or partial)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, *, base: float = 10000.0, fraction: float = 1.0):
+    """Inverse frequencies for the rotary-embedded prefix of the head dim."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (base ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return jnp.asarray(inv, dtype=jnp.float32), rot
+
+
+def apply_rope(
+    x: jax.Array,  # (..., S, H, Dh)
+    positions: jax.Array,  # (..., S) int32
+    inv_freq: jax.Array,
+    rot: int,
+) -> jax.Array:
+    """Rotate the first ``rot`` dims of each head; pass the rest through."""
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in) + b_in, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,  # (..., V) any float dtype
+    labels: jax.Array,  # (...,) int32
+    mask: jax.Array | None = None,  # (...,) 1 = count
+) -> jax.Array:
+    """Mean CE over unmasked positions, computed in fp32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+# ---------------------------------------------------------------------------
+# XLA's sharding propagation loses the batch dim inside scanned layer bodies
+# (observed: f32[256,2,4096,4096] attention scores with batch unsharded at
+# 512 devices). Launchers activate a (mesh, rules) context and the models
+# pin their hidden-stream/QKV/MLP/logit activations through it — the same
+# approach production JAX frameworks take. Without a context (smoke tests,
+# single device) ``constrain`` is the identity.
+
+_ACT_CTX: list = []
+
+
+class activation_sharding:
+    """Context manager: route ``constrain`` through (mesh, rules)."""
+
+    def __init__(self, mesh, rules):
+        self.pair = (mesh, rules)
+
+    def __enter__(self):
+        _ACT_CTX.append(self.pair)
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_CTX.pop()
+        return False
+
+
+def constrain(x: jax.Array, names: tuple) -> jax.Array:
+    """Pin a (possibly traced) activation to the planned sharding."""
+    if not _ACT_CTX:
+        return x
+    mesh, rules = _ACT_CTX[-1]
+    from repro.distributed.sharding import plan_sharding
+
+    sh = plan_sharding(mesh, x.shape, names, rules)
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+# ---------------------------------------------------------------------------
+# Remat (activation checkpointing) for scan bodies
+# ---------------------------------------------------------------------------
+
+
+def maybe_remat(body: Callable, policy: str) -> Callable:
+    """Wrap a scan body with jax.checkpoint per the config's remat policy."""
+    if policy == "none":
+        return body
+    if policy == "full":
+        return jax.checkpoint(body)
+    if policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Abstract init (dry-run path: no allocation)
+# ---------------------------------------------------------------------------
+
+
+def abstract_init(init_fn: Callable[[jax.Array], PyTree]) -> PyTree:
+    """ShapeDtypeStruct tree of ``init_fn(key)`` without running it."""
+    return jax.eval_shape(init_fn, jax.random.key(0))

@@ -1,0 +1,277 @@
+"""Dense decoder-only transformer LM (llama/qwen/stablelm-style, GQA).
+
+Covers the assigned archs tinyllama-1.1b, qwen1.5-{0.5b,4b} (QKV bias),
+stablelm-1.6b (partial RoPE, LayerNorm), and the internvl2-76b LM backbone
+(``frontend="vision"``: precomputed patch embeddings are prepended to the
+token embeddings; the ViT itself is a stub per the assignment).
+
+Layers are weight-stacked and executed with ``lax.scan``; caches carry a
+leading layer dim and ride along as scan xs/ys.
+
+``batch`` dict keys:
+  train : tokens (B,S) int32, labels (B,S) int32 (-1 = masked),
+          [prefix_embeds (B,P,D) for vlm]
+  prefill: tokens (B,S), [prefix_embeds]
+  decode : tokens (B,1)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .api import ModelConfig
+from .attention import (
+    KVCache,
+    attend,
+    kv_cache_abstract,
+    kv_cache_init,
+    kv_cache_layer_update,
+    kv_cache_slot_positions,
+)
+from .common import (
+    ParamFactory,
+    apply_rope,
+    constrain,
+    layer_norm,
+    maybe_remat,
+    rms_norm,
+    rope_frequencies,
+    softmax_cross_entropy,
+    split_tree,
+    swiglu,
+)
+
+ACT3 = ("batch", None, None)  # hidden stream (B, S, D)
+ACT_Q = ("batch", None, "heads", None)
+ACT_KV = ("batch", None, "kv_heads", None)
+
+__all__ = ["DenseLM"]
+
+
+class DenseLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.inv_freq, self.rot = rope_frequencies(
+            cfg.dh, base=cfg.rope_base, fraction=cfg.rope_fraction
+        )
+
+    def _mlp_params(self, f: ParamFactory, L: int) -> dict:
+        cfg = self.cfg
+        D, F = cfg.d_model, cfg.d_ff
+        return {
+            "w_gate": f.dense((L, D, F), ("layers", "embed", "mlp")),
+            "w_up": f.dense((L, D, F), ("layers", "embed", "mlp")),
+            "w_down": f.dense((L, F, D), ("layers", "mlp", "embed")),
+        }
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        cfg = self.cfg
+        f = ParamFactory(key, dtype=cfg.dtype)
+        L, D, H, KVH, Dh, F = (
+            cfg.n_layers,
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.dh,
+            cfg.d_ff,
+        )
+        V = cfg.padded_vocab
+        blocks = {
+            "wq": f.dense((L, D, H * Dh), ("layers", "embed", "heads_flat")),
+            "wk": f.dense((L, D, KVH * Dh), ("layers", "embed", "kv_flat")),
+            "wv": f.dense((L, D, KVH * Dh), ("layers", "embed", "kv_flat")),
+            "wo": f.dense((L, H * Dh, D), ("layers", "heads_flat", "embed")),
+            "ln1": f.ones((L, D), ("layers", "embed")),
+            "ln2": f.ones((L, D), ("layers", "embed")),
+            **self._mlp_params(f, L),
+        }
+        if cfg.qkv_bias:
+            blocks["bq"] = f.zeros((L, H * Dh), ("layers", "heads_flat"))
+            blocks["bk"] = f.zeros((L, KVH * Dh), ("layers", "kv_flat"))
+            blocks["bv"] = f.zeros((L, KVH * Dh), ("layers", "kv_flat"))
+        if cfg.norm == "layer":
+            blocks["ln1b"] = f.zeros((L, D), ("layers", "embed"))
+            blocks["ln2b"] = f.zeros((L, D), ("layers", "embed"))
+        tree = {
+            "embed": f.dense((V, D), ("vocab", "embed"), scale=0.02),
+            "blocks": blocks,
+            "ln_f": f.ones((D,), ("embed",)),
+        }
+        if cfg.norm == "layer":
+            tree["ln_fb"] = f.zeros((D,), ("embed",))
+        if not cfg.tie_embeddings:
+            tree["unembed"] = f.dense((V, D), ("vocab", "embed"))
+        return split_tree(tree)
+
+    # ------------------------------------------------------------- internals
+    def _norm(self, x, g, b):
+        if self.cfg.norm == "layer":
+            return layer_norm(x, g, b)
+        return rms_norm(x, g)
+
+    def _qkv(self, h, lp):
+        cfg = self.cfg
+        B, S, _ = h.shape
+        q = jnp.einsum("bsd,df->bsf", h, lp["wq"])
+        k = jnp.einsum("bsd,df->bsf", h, lp["wk"])
+        v = jnp.einsum("bsd,df->bsf", h, lp["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = constrain(q.reshape(B, S, cfg.n_heads, cfg.dh), ACT_Q)
+        k = constrain(k.reshape(B, S, cfg.n_kv_heads, cfg.dh), ACT_KV)
+        v = constrain(v.reshape(B, S, cfg.n_kv_heads, cfg.dh), ACT_KV)
+        return q, k, v
+
+    def _mlp(self, hn, lp):
+        """Feed-forward sub-block; overridden by the MoE family."""
+        g = jax.nn.silu(jnp.einsum("...d,df->...f", hn, lp["w_gate"]))
+        u = jnp.einsum("...d,df->...f", hn, lp["w_up"])
+        gu = constrain(g * u, ("batch", None, "mlp"))
+        return jnp.einsum("...f,fd->...d", gu, lp["w_down"])
+
+    def _block_train(self, h, lp, positions):
+        cfg = self.cfg
+        h = constrain(h, ACT3)
+        hn = self._norm(h, lp["ln1"], lp.get("ln1b"))
+        q, k, v = self._qkv(hn, lp)
+        q = apply_rope(q, positions, self.inv_freq, self.rot)
+        k = apply_rope(k, positions, self.inv_freq, self.rot)
+        o = attend(
+            q, k, v, impl=cfg.attention_impl, causal=True,
+            q_positions=positions, kv_positions=positions,
+            window=cfg.window or None,
+        )
+        o = constrain(o, ACT_Q)
+        o = jnp.einsum("bsf,fd->bsd", o.reshape(o.shape[0], o.shape[1], -1), lp["wo"])
+        h = h + o
+        hn = self._norm(h, lp["ln2"], lp.get("ln2b"))
+        h = h + self._mlp(hn, lp)
+        return h
+
+    def _scan_train(self, params, h, positions):
+        def body(carry, lp):
+            return self._block_train(carry, lp, positions), None
+
+        body = maybe_remat(body, self.cfg.remat_policy)
+        if self.cfg.scan_layers:
+            h, _ = jax.lax.scan(body, h, params["blocks"])
+        else:
+            L = self.cfg.n_layers
+            for l in range(L):
+                lp = jax.tree_util.tree_map(lambda x: x[l], params["blocks"])
+                h = self._block_train(h, lp, positions)
+        return h
+
+    def _embed(self, params, tokens):
+        return params["embed"][tokens].astype(self.cfg.dtype)
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = constrain(jnp.einsum("bsd,vd->bsv", h, table),
+                           ("batch", None, "vocab"))
+        if cfg.padded_vocab != cfg.vocab:  # mask padding rows
+            pad = cfg.padded_vocab - cfg.vocab
+            neg = jnp.full((*logits.shape[:-1], pad), -1e9, logits.dtype)
+            logits = jnp.concatenate([logits[..., : cfg.vocab], neg], axis=-1)
+        return logits
+
+    def _forward_train(self, params, batch):
+        cfg = self.cfg
+        h = self._embed(params, batch["tokens"])
+        B, S_text = batch["tokens"].shape
+        if cfg.n_prefix_tokens:
+            h = jnp.concatenate([batch["prefix_embeds"].astype(cfg.dtype), h], axis=1)
+        S = h.shape[1]
+        h = constrain(h, ACT3)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h = self._scan_train(params, h, positions)
+        h = self._norm(h, params["ln_f"], params.get("ln_fb"))
+        if cfg.n_prefix_tokens:
+            h = h[:, cfg.n_prefix_tokens :]
+        return self._logits(params, h)
+
+    # ----------------------------------------------------------------- train
+    def loss(self, params, batch):
+        logits = self._forward_train(params, batch)
+        labels = batch["labels"]
+        mask = labels >= 0
+        return softmax_cross_entropy(logits, jnp.maximum(labels, 0), mask)
+
+    # ----------------------------------------------------------------- serve
+    def make_caches(self, batch: int, s_max: int, *, abstract: bool = False):
+        cfg = self.cfg
+        mk = kv_cache_abstract if abstract else kv_cache_init
+        return mk(cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.dh, cfg.dtype)
+
+    def cache_axes(self):
+        kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+        return KVCache(k=kv, v=kv, length=("batch",), positions=("batch", "seq"))
+
+    def _attend_cached(self, q, ck, cv, cpos, qpos):
+        cfg = self.cfg
+        return attend(
+            q, ck, cv, impl=cfg.attention_impl, causal=True,
+            q_positions=qpos, kv_positions=cpos,
+            window=cfg.window or None, kv_valid=cpos >= 0,
+        )
+
+    def _step(self, params, cache: KVCache, tokens, prefix_embeds=None,
+              fresh: bool = False):
+        """Shared prefill/decode: append S_q tokens and return last logits.
+
+        ``fresh=True`` (prefill from an empty cache) attends over the
+        in-flight K/V directly — this is what lets the streaming/chunked
+        attention implementation engage on the 32k prefill hot path.
+        """
+        cfg = self.cfg
+        h = self._embed(params, tokens)
+        if prefix_embeds is not None:
+            h = jnp.concatenate([prefix_embeds.astype(cfg.dtype), h], axis=1)
+        B, Sq, _ = h.shape
+        start = cache.length
+        qpos = start[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+        new_pos = kv_cache_slot_positions(cache.positions, qpos, start)
+
+        def body(carry, xs):
+            hh = constrain(carry, ACT3)
+            lp, ck, cv = xs
+            hn = self._norm(hh, lp["ln1"], lp.get("ln1b"))
+            q, k, v = self._qkv(hn, lp)
+            q = apply_rope(q, qpos, self.inv_freq, self.rot)
+            k = apply_rope(k, qpos, self.inv_freq, self.rot)
+            ck, cv = kv_cache_layer_update(ck, cv, k, v, start)
+            if fresh and cfg.attention_impl == "chunked":
+                # streaming attention over in-flight K/V (flash algorithm);
+                # for the xla impl the cached path is better — its keys keep
+                # the cache's seq sharding, which matters for archs whose
+                # head counts cannot shard (qwen1.5-4b: 20 heads).
+                o = attend(q, k, v, impl=cfg.attention_impl, causal=True,
+                           q_positions=qpos, kv_positions=qpos,
+                           window=cfg.window or None)
+            else:
+                o = self._attend_cached(q, ck, cv, new_pos, qpos)
+            o = constrain(o, ACT_Q)
+            o = jnp.einsum("bsf,fd->bsd", o.reshape(B, Sq, -1), lp["wo"])
+            hh = hh + o
+            hn = self._norm(hh, lp["ln2"], lp.get("ln2b"))
+            hh = hh + self._mlp(hn, lp)
+            return hh, (ck, cv)
+
+        h, (nk, nv) = jax.lax.scan(body, h, (params["blocks"], cache.k, cache.v))
+        h = self._norm(h, params["ln_f"], params.get("ln_fb"))
+        logits = self._logits(params, h[:, -1:])
+        new_cache = KVCache(k=nk, v=nv, length=start + Sq, positions=new_pos)
+        return logits, new_cache
+
+    def prefill(self, params, cache, batch):
+        return self._step(
+            params, cache, batch["tokens"], batch.get("prefix_embeds"),
+            fresh=True,
+        )
+
+    def decode_step(self, params, cache, tokens):
+        return self._step(params, cache, tokens)

@@ -1,0 +1,363 @@
+"""Griffin-style hybrid LM (RecurrentGemma): RG-LRU recurrent blocks + local
+attention, in the paper's 1:2 (attn:rec) pattern (arXiv:2402.19427).
+
+Block pattern ("rec","rec","attn") repeats over super-blocks which are
+weight-stacked and scanned; layers not covered by a whole pattern repeat go
+into an unscanned tail (38 = 12*3 + 2 for the 9b config).
+
+RG-LRU (diagonal linear recurrence, trained with an associative scan —
+sub-quadratic, which is what makes ``long_500k`` runnable):
+
+    r_t, i_t = sigmoid(W_g x_t)
+    log a_t  = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t      = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Temporal-mixing block: W_out( GeLU(W_gate x) * RG-LRU(conv4(W_x x)) ).
+Local attention uses a bounded window cache (window slots, wrapping), MQA
+per the assigned config (kv=1). MLP is GeGLU.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .api import ModelConfig
+from .attention import attend, kv_cache_layer_update, kv_cache_slot_positions
+from .common import (
+    ParamFactory,
+    apply_rope,
+    constrain,
+    maybe_remat,
+    rms_norm,
+    rope_frequencies,
+    softmax_cross_entropy,
+    split_tree,
+)
+
+ACT3 = ("batch", None, None)
+ACT_R = ("batch", None, "rnn")
+from .xlstm import _causal_depthwise_conv, _conv_step
+
+__all__ = ["GriffinLM", "GriffinCache"]
+
+RGLRU_C = 8.0
+
+
+class GriffinCache(NamedTuple):
+    rec_h: jax.Array  # (NSUP, n_rec, B, W_) fp32 recurrent states
+    rec_conv: jax.Array  # (NSUP, n_rec, B, w-1, W_)
+    attn_k: jax.Array  # (NSUP, n_attn, B, S_cache, KVH, dh)
+    attn_v: jax.Array
+    attn_pos: jax.Array  # (NSUP, n_attn, B, S_cache) absolute positions (-1 empty)
+    tail_h: jax.Array  # (n_tail_rec, B, W_)
+    tail_conv: jax.Array  # (n_tail_rec, B, w-1, W_)
+    length: jax.Array  # (B,) int32
+
+
+def _rglru_parallel(x, r, i, lam):
+    """x, r, i: (B, S, W_) fp32; lam: (W_,). Returns (h (B,S,W_), h_last)."""
+    log_a = -RGLRU_C * jax.nn.softplus(lam) * r  # (B, S, W_) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(op, (a, gated), axis=1)
+    return h, h[:, -1]
+
+
+def _rglru_step(x, r, i, lam, h_prev):
+    log_a = -RGLRU_C * jax.nn.softplus(lam) * r
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    return h
+
+
+class GriffinLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern = cfg.block_pattern or ("rec", "rec", "attn")
+        self.tail = cfg.pattern_tail
+        per = len(self.pattern)
+        covered = cfg.n_layers - len(self.tail)
+        assert covered % per == 0, (cfg.n_layers, self.pattern, self.tail)
+        self.n_sup = covered // per
+        self.n_rec = sum(1 for p in self.pattern if p == "rec")
+        self.n_attn = sum(1 for p in self.pattern if p == "attn")
+        self.rnn_w = cfg.rnn_state_dim or cfg.d_model
+        self.inv_freq, self.rot = rope_frequencies(cfg.dh, base=cfg.rope_base)
+
+    # ------------------------------------------------------------------ init
+    def _rec_params(self, f: ParamFactory, lead: tuple, lead_ax: tuple):
+        cfg = self.cfg
+        D, W_, w = cfg.d_model, self.rnn_w, cfg.conv_width
+        return {
+            "ln": f.ones((*lead, D), (*lead_ax, "embed")),
+            "w_x": f.dense((*lead, D, W_), (*lead_ax, "embed", "rnn")),
+            "w_gate": f.dense((*lead, D, W_), (*lead_ax, "embed", "rnn")),
+            "conv": f.dense((*lead, w, W_), (*lead_ax, None, "rnn"), scale=0.5),
+            "w_g2": f.dense((*lead, W_, 2 * W_), (*lead_ax, "rnn", "rnn2")),
+            "lam": f.value(
+                jnp.broadcast_to(jnp.linspace(0.5, 2.0, W_, dtype=jnp.float32), (*lead, W_)),
+                (*lead_ax, "rnn"),
+            ),
+            "w_out": f.dense((*lead, W_, D), (*lead_ax, "rnn", "embed")),
+            **self._mlp_params(f, lead, lead_ax),
+        }
+
+    def _attn_params(self, f: ParamFactory, lead: tuple, lead_ax: tuple):
+        cfg = self.cfg
+        D, H, KVH, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+        return {
+            "ln": f.ones((*lead, D), (*lead_ax, "embed")),
+            "wq": f.dense((*lead, D, H * dh), (*lead_ax, "embed", "heads_flat")),
+            "wk": f.dense((*lead, D, KVH * dh), (*lead_ax, "embed", "kv_flat")),
+            "wv": f.dense((*lead, D, KVH * dh), (*lead_ax, "embed", "kv_flat")),
+            "wo": f.dense((*lead, H * dh, D), (*lead_ax, "heads_flat", "embed")),
+            **self._mlp_params(f, lead, lead_ax),
+        }
+
+    def _mlp_params(self, f, lead, lead_ax):
+        cfg = self.cfg
+        D, F = cfg.d_model, cfg.d_ff
+        return {
+            "ln2": f.ones((*lead, D), (*lead_ax, "embed")),
+            "gg_gate": f.dense((*lead, D, F), (*lead_ax, "embed", "mlp")),
+            "gg_up": f.dense((*lead, D, F), (*lead_ax, "embed", "mlp")),
+            "gg_down": f.dense((*lead, F, D), (*lead_ax, "mlp", "embed")),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        f = ParamFactory(key, dtype=cfg.dtype)
+        NS = self.n_sup
+        sup = {}
+        for slot, kind in enumerate(self.pattern):
+            maker = self._rec_params if kind == "rec" else self._attn_params
+            sup[f"slot{slot}"] = maker(f, (NS,), ("sup",))
+        tree: dict = {
+            "sup": sup,
+            "embed": f.dense((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+            "ln_f": f.ones((cfg.d_model,), ("embed",)),
+        }
+        for t, kind in enumerate(self.tail):
+            maker = self._rec_params if kind == "rec" else self._attn_params
+            tree[f"tail{t}"] = maker(f, (), ())
+        return split_tree(tree)
+
+    # ------------------------------------------------------------- sub-blocks
+    def _rec_mix(self, hn, lp, h0, conv_tail=None, single=False):
+        """Temporal mixing via RG-LRU. hn (B,S,D) or (B,1,D) when single."""
+        gate = constrain(jax.nn.gelu(
+            jnp.einsum("bsd,dw->bsw", hn, lp["w_gate"]), approximate=True), ACT_R)
+        xb = constrain(jnp.einsum("bsd,dw->bsw", hn, lp["w_x"]), ACT_R)
+        if single:
+            xc, conv_tail = _conv_step(xb[:, 0], conv_tail, lp["conv"])
+            g2 = jnp.einsum("bw,wg->bg", xc.astype(jnp.float32), lp["w_g2"].astype(jnp.float32))
+            r, i = jnp.split(jax.nn.sigmoid(g2), 2, axis=-1)
+            h1 = _rglru_step(xc.astype(jnp.float32), r, i, lp["lam"].astype(jnp.float32), h0)
+            y = (h1.astype(hn.dtype) * gate[:, 0])[:, None]
+            return jnp.einsum("bsw,wd->bsd", y, lp["w_out"]), h1, conv_tail
+        xc = _causal_depthwise_conv(xb, lp["conv"])
+        g2 = jnp.einsum("bsw,wg->bsg", xc.astype(jnp.float32), lp["w_g2"].astype(jnp.float32))
+        r, i = jnp.split(jax.nn.sigmoid(g2), 2, axis=-1)
+        h, h_last = _rglru_parallel(xc.astype(jnp.float32), r, i, lp["lam"].astype(jnp.float32))
+        y = h.astype(hn.dtype) * gate
+        tail = xb[:, -(self.cfg.conv_width - 1) :, :]
+        return jnp.einsum("bsw,wd->bsd", y, lp["w_out"]), h_last, tail
+
+    def _attn_mix_train(self, hn, lp, positions):
+        cfg = self.cfg
+        B, S, _ = hn.shape
+        q = constrain(jnp.einsum("bsd,df->bsf", hn, lp["wq"]).reshape(
+            B, S, cfg.n_heads, cfg.dh), ("batch", None, "heads", None))
+        k = jnp.einsum("bsd,df->bsf", hn, lp["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.dh)
+        v = jnp.einsum("bsd,df->bsf", hn, lp["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.dh)
+        q = apply_rope(q, positions, self.inv_freq, self.rot)
+        k = apply_rope(k, positions, self.inv_freq, self.rot)
+        o = attend(q, k, v, impl=cfg.attention_impl, causal=True,
+                   q_positions=positions, kv_positions=positions,
+                   window=cfg.window or None)
+        o = constrain(o, ("batch", None, "heads", None))
+        return jnp.einsum("bsf,fd->bsd", o.reshape(B, S, -1), lp["wo"])
+
+    def _mlp(self, h, lp):
+        hn = rms_norm(h, lp["ln2"])
+        g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", hn, lp["gg_gate"]), approximate=True)
+        u = jnp.einsum("bsd,df->bsf", hn, lp["gg_up"])
+        gu = constrain(g * u, ("batch", None, "mlp"))
+        return h + jnp.einsum("bsf,fd->bsd", gu, lp["gg_down"])
+
+    def _block_train(self, h, lp, kind, positions):
+        h = constrain(h, ACT3)
+        hn = rms_norm(h, lp["ln"])
+        if kind == "rec":
+            mix, _, _ = self._rec_mix(hn, lp, None)
+        else:
+            mix = self._attn_mix_train(hn, lp, positions)
+        return self._mlp(h + mix, lp)
+
+    # ----------------------------------------------------------------- train
+    def _forward_train(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = params["embed"][tokens].astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def sup_body(carry, xs):
+            hh = carry
+            for slot, kind in enumerate(self.pattern):
+                hh = self._block_train(hh, xs[f"slot{slot}"], kind, positions)
+            return hh, None
+
+        h, _ = jax.lax.scan(maybe_remat(sup_body, cfg.remat_policy), h, params["sup"])
+        for t, kind in enumerate(self.tail):
+            h = self._block_train(h, params[f"tail{t}"], kind, positions)
+        h = rms_norm(h, params["ln_f"])
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        if cfg.padded_vocab != cfg.vocab:
+            pad = cfg.padded_vocab - cfg.vocab
+            neg = jnp.full((*logits.shape[:-1], pad), -1e9, logits.dtype)
+            logits = jnp.concatenate([logits[..., : cfg.vocab], neg], axis=-1)
+        return logits
+
+    def loss(self, params, batch):
+        logits = self._forward_train(params, batch)
+        labels = batch["labels"]
+        return softmax_cross_entropy(logits, jnp.maximum(labels, 0), labels >= 0)
+
+    # ----------------------------------------------------------------- serve
+    def make_caches(self, batch: int, s_max: int, *, abstract: bool = False):
+        cfg = self.cfg
+        s_cache = min(s_max, cfg.window) if cfg.window else s_max
+        s_cache = max(s_cache, 1)
+        NS, w = self.n_sup, cfg.conv_width
+        n_tail_rec = sum(1 for k in self.tail if k == "rec")
+        shapes = dict(
+            rec_h=((NS, self.n_rec, batch, self.rnn_w), jnp.float32),
+            rec_conv=((NS, self.n_rec, batch, w - 1, self.rnn_w), cfg.dtype),
+            attn_k=((NS, self.n_attn, batch, s_cache, cfg.n_kv_heads, cfg.dh), cfg.dtype),
+            attn_v=((NS, self.n_attn, batch, s_cache, cfg.n_kv_heads, cfg.dh), cfg.dtype),
+            attn_pos=((NS, self.n_attn, batch, s_cache), jnp.int32),
+            tail_h=((n_tail_rec, batch, self.rnn_w), jnp.float32),
+            tail_conv=((n_tail_rec, batch, w - 1, self.rnn_w), cfg.dtype),
+            length=((batch,), jnp.int32),
+        )
+        if abstract:
+            vals = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+        else:
+            vals = {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+            vals["attn_pos"] = jnp.full(shapes["attn_pos"][0], -1, jnp.int32)
+        return GriffinCache(**vals)
+
+    def cache_axes(self):
+        kv = ("sup", "layers", "batch", "seq", "kv_heads", "head_dim")
+        return GriffinCache(
+            rec_h=("sup", "layers", "batch", "rnn"),
+            rec_conv=("sup", "layers", "batch", None, "rnn"),
+            attn_k=kv, attn_v=kv,
+            attn_pos=("sup", "layers", "batch", "seq"),
+            tail_h=("layers", "batch", "rnn"),
+            tail_conv=("layers", "batch", None, "rnn"),
+            length=("batch",),
+        )
+
+    def _attn_mix_cached(self, hn, lp, ck, cv, cpos, start, qpos, single):
+        cfg = self.cfg
+        B, Sq, _ = hn.shape
+        q = jnp.einsum("bsd,df->bsf", hn, lp["wq"]).reshape(B, Sq, cfg.n_heads, cfg.dh)
+        k = jnp.einsum("bsd,df->bsf", hn, lp["wk"]).reshape(B, Sq, cfg.n_kv_heads, cfg.dh)
+        v = jnp.einsum("bsd,df->bsf", hn, lp["wv"]).reshape(B, Sq, cfg.n_kv_heads, cfg.dh)
+        q = apply_rope(q, qpos, self.inv_freq, self.rot)
+        k = apply_rope(k, qpos, self.inv_freq, self.rot)
+        ck, cv = kv_cache_layer_update(ck, cv, k, v, start)
+        cpos = kv_cache_slot_positions(cpos, qpos, start)
+        if single:
+            # decode: attend over the (bounded, wrapped) window cache
+            o = attend(q, ck, cv, impl=cfg.attention_impl, causal=True,
+                       q_positions=qpos, kv_positions=cpos,
+                       window=cfg.window or None, kv_valid=cpos >= 0)
+        else:
+            # prefill (fresh cache): attend over the in-flight keys — mid-
+            # sequence queries must see keys the wrapped cache has dropped.
+            o = attend(q, k, v, impl=cfg.attention_impl, causal=True,
+                       q_positions=qpos, kv_positions=qpos,
+                       window=cfg.window or None)
+        return jnp.einsum("bsf,fd->bsd", o.reshape(B, Sq, -1), lp["wo"]), ck, cv, cpos
+
+    def _step(self, params, cache: GriffinCache, tokens, single: bool):
+        cfg = self.cfg
+        B, Sq = tokens.shape
+        h = params["embed"][tokens].astype(cfg.dtype)
+        start = cache.length
+        qpos = start[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+
+        def sup_body(carry, xs):
+            hh = carry
+            lps, rh, rcv, ak, av, apos = xs
+            ri = ai = 0
+            rh_n, rcv_n, ak_n, av_n, apos_n = [], [], [], [], []
+            for slot, kind in enumerate(self.pattern):
+                lp = lps[f"slot{slot}"]
+                hn = rms_norm(hh, lp["ln"])
+                if kind == "rec":
+                    if single:
+                        mix, h1, tail = self._rec_mix(hn, lp, rh[ri], rcv[ri], single=True)
+                    else:
+                        mix, h1, tail = self._rec_mix(hn, lp, None)
+                    rh_n.append(h1)
+                    rcv_n.append(tail)
+                    ri += 1
+                else:
+                    mix, k1, v1, p1 = self._attn_mix_cached(
+                        hn, lp, ak[ai], av[ai], apos[ai], start, qpos, single)
+                    ak_n.append(k1)
+                    av_n.append(v1)
+                    apos_n.append(p1)
+                    ai += 1
+                hh = self._mlp(hh + mix, lp)
+            return hh, (jnp.stack(rh_n), jnp.stack(rcv_n), jnp.stack(ak_n),
+                        jnp.stack(av_n), jnp.stack(apos_n))
+
+        xs = (params["sup"], cache.rec_h, cache.rec_conv,
+              cache.attn_k, cache.attn_v, cache.attn_pos)
+        h, (rh, rcv, ak, av, apos) = jax.lax.scan(sup_body, h, xs)
+
+        tail_h, tail_conv = [], []
+        ti = 0
+        for t, kind in enumerate(self.tail):
+            lp = params[f"tail{t}"]
+            hn = rms_norm(h, lp["ln"])
+            if kind == "rec":
+                if single:
+                    mix, h1, tl = self._rec_mix(hn, lp, cache.tail_h[ti],
+                                                cache.tail_conv[ti], single=True)
+                else:
+                    mix, h1, tl = self._rec_mix(hn, lp, None)
+                tail_h.append(h1)
+                tail_conv.append(tl)
+                ti += 1
+                h = self._mlp(h + mix, lp)
+        new = cache._replace(
+            rec_h=rh, rec_conv=rcv, attn_k=ak, attn_v=av, attn_pos=apos,
+            tail_h=jnp.stack(tail_h) if tail_h else cache.tail_h,
+            tail_conv=jnp.stack(tail_conv) if tail_conv else cache.tail_conv,
+            length=start + Sq,
+        )
+        h = rms_norm(h[:, -1:], params["ln_f"])
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        if cfg.padded_vocab != cfg.vocab:
+            logits = logits[..., : cfg.vocab]
+        return logits, new
+
+    def prefill(self, params, cache, batch):
+        return self._step(params, cache, batch["tokens"], single=False)
+
+    def decode_step(self, params, cache, tokens):
+        return self._step(params, cache, tokens, single=True)

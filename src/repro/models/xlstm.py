@@ -1,0 +1,663 @@
+"""xLSTM LM (sLSTM + mLSTM blocks) — the assigned ``ssm``-family architecture.
+
+Faithful to the xLSTM block topology (arXiv:2405.04517): mLSTM blocks are
+pre-norm up-projection (factor ``mlstm_proj_factor``) blocks with a causal
+depthwise conv, per-head matrix memory C in (d_k x d_v), exponential-style
+input/forget gates, and an output gate branch; sLSTM blocks use a scalar
+memory with block-diagonal (per-head) recurrence and a stabilizer state,
+followed by a 4/3 GeLU MLP.
+
+Layout: ``slstm_period`` groups layers into super-blocks of
+(period-1 mLSTM + 1 sLSTM); super-blocks are weight-stacked and scanned.
+
+Training runs the mLSTM in **chunkwise-parallel** form (intra-chunk quadratic
+on a small chunk, inter-chunk recurrent state) — O(S * W) not O(S^2), which is
+what makes the ``long_500k`` shape runnable for this family. The sLSTM is a
+genuine sequential ``lax.scan`` over time (its nonlinearity does not admit a
+parallel form). Decoding is O(1)-state recurrent for both.
+
+Simplification vs the paper (recorded in DESIGN.md): input/forget gates use
+log-sigmoid parameterization (bounded) rather than exp-gates with a running
+max stabilizer for the mLSTM; the sLSTM keeps the exp-gate + stabilizer.
+"""
+from __future__ import annotations
+
+import functools
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .api import ModelConfig
+from .common import (
+    ParamFactory,
+    constrain,
+    maybe_remat,
+    rms_norm,
+    softmax_cross_entropy,
+    split_tree,
+)
+
+ACT3 = ("batch", None, None)
+ACT_P = ("batch", None, "mlp")  # up-projected stream (B, S, pD)
+
+__all__ = ["XLSTMLM", "XLSTMState"]
+
+CHUNK = 128  # intra-chunk quadratic width for the chunkwise mLSTM
+
+
+class XLSTMState(NamedTuple):
+    """Recurrent serving state (the ssm analogue of a KV cache; O(1) in S)."""
+
+    m_C: jax.Array  # (NSUP, PM, B, NH, dk, dv) fp32 matrix memory
+    m_n: jax.Array  # (NSUP, PM, B, NH, dk) fp32 normalizer
+    m_conv: jax.Array  # (NSUP, PM, B, w-1, pD) conv tail
+    s_c: jax.Array  # (NSUP, B, D) fp32
+    s_n: jax.Array  # (NSUP, B, D) fp32
+    s_m: jax.Array  # (NSUP, B, D) fp32 stabilizer
+    s_h: jax.Array  # (NSUP, B, D) hidden fed back into the recurrence
+    s_conv: jax.Array  # (NSUP, B, w-1, D)
+    length: jax.Array  # (B,) int32
+
+
+def _causal_depthwise_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """x: (B, S, Cdim), kernel: (w, Cdim) -> causal depthwise conv, same length.
+
+    Implemented as w shifted multiply-adds rather than lax.conv: XLA's conv
+    partitioner cannot shard feature_group_count channels and replicates the
+    whole input per layer (measured ~190 GB/step of all-reduce on the xlstm
+    train cell — see EXPERIMENTS.md §Perf iteration B2); the shift-add form
+    is elementwise and partitions cleanly over the channel axis.
+    """
+    w = kernel.shape[0]
+    kf = kernel.astype(x.dtype)  # 4-tap conv is precision-insensitive; bf16
+    out = x * kf[w - 1]          # halves the TP all-reduce bytes around it
+    for t in range(1, w):
+        shifted = jnp.pad(x[:, :-t, :], ((0, 0), (t, 0), (0, 0)))
+        out = out + shifted * kf[w - 1 - t]
+    return out
+
+
+def _conv_step(x_t: jax.Array, tail: jax.Array, kernel: jax.Array):
+    """Single-token causal conv. x_t: (B, C); tail: (B, w-1, C)."""
+    window = jnp.concatenate([tail, x_t[:, None, :]], axis=1)  # (B, w, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), kernel.astype(jnp.float32))
+    return out.astype(x_t.dtype), window[:, 1:, :]
+
+
+def _slstm_step_math(xt, r4, c, n, m, hprev, NH, dh):
+    """One sLSTM step. xt: (B,4,D); r4: (NH, dh, 4, dh) gate-major."""
+    B, _, D = xt.shape
+    hheads = hprev.reshape(B, NH, dh)
+    rec = jnp.einsum("bhd,hdgf->bghf", hheads, r4).reshape(B, 4, D)
+    g = xt + rec
+    zt = jnp.tanh(g[:, 0])
+    it = g[:, 1]
+    ft = g[:, 2]
+    ot = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(ft + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    c_new = f_ * c + i_ * zt
+    n_new = f_ * n + i_
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return c_new, n_new, m_new, h_new
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _slstm_scan_core(wx4s, r, c0, n0, m0, h0, NH, dh):
+    """Sequential sLSTM scan with a distribution-aware custom VJP.
+
+    Why custom: reverse-mode through a plain lax.scan accumulates the shared
+    recurrent-weight gradient dR (an outer product contracted over the
+    *sharded* batch dim) inside the backward while loop — the partitioner
+    then emits one all-reduce of dR per timestep (412 GB/step measured on
+    the xlstm train cell at 256 chips). Here the backward scan emits the
+    per-step gate gradients dg as stacked ys and dR is ONE einsum (and one
+    all-reduce) after the loop. See EXPERIMENTS.md §Perf iteration B2.
+    """
+    # primal path (no differentiation): lean scan, no saved pre-states
+    r4 = r.reshape(NH, dh, 4, dh)
+
+    def step(carry, xt):
+        out = _slstm_step_math(xt, r4, *carry, NH, dh)
+        return out, out[3]
+
+    finals, hs = jax.lax.scan(step, (c0, n0, m0, h0), wx4s)
+    return finals, hs
+
+
+def _slstm_scan_fwd_impl(wx4s, r, c0, n0, m0, h0, NH, dh):
+    r4 = r.reshape(NH, dh, 4, dh)
+
+    def step(carry, xt):
+        c, n, m, hprev = carry
+        out = _slstm_step_math(xt, r4, c, n, m, hprev, NH, dh)
+        return out, (c, n, m, hprev)  # save PRE-step states for the bwd
+
+    finals, pres = jax.lax.scan(step, (c0, n0, m0, h0), wx4s)
+    hs = jnp.concatenate([pres[3][1:], finals[3][None]], axis=0)
+    return finals, hs, pres
+
+
+def _slstm_scan_core_fwd(wx4s, r, c0, n0, m0, h0, NH, dh):
+    finals, hs, pres = _slstm_scan_fwd_impl(wx4s, r, c0, n0, m0, h0, NH, dh)
+    return (finals, hs), (wx4s, r, pres)
+
+
+def _slstm_scan_core_bwd(NH, dh, res, cts):
+    wx4s, r, pres = res
+    (dc_f, dn_f, dm_f, dh_f), dhs = cts
+    r4 = r.reshape(NH, dh, 4, dh)
+    S = wx4s.shape[0]
+
+    def bwd_step(carry, xs):
+        dc, dn, dm, dh_ = carry
+        xt, c, n, m, hprev, dh_out = xs
+        # recompute the step and pull gradients through it
+        def f(xt_, hprev_, c_, n_, m_):
+            return _slstm_step_math(xt_, r4, c_, n_, m_, hprev_, NH, dh)
+
+        _, vjp = jax.vjp(f, xt, hprev, c, n, m)
+        dxt, dhprev, dc_p, dn_p, dm_p = vjp((dc, dn, dm, dh_ + dh_out))
+        return (dc_p, dn_p, dm_p, dhprev), (dxt, hprev)
+
+    xs = (wx4s, *pres, dhs)
+    xs_rev = jax.tree_util.tree_map(lambda a: a[::-1], xs)
+    (dc0, dn0, dm0, dh0), (dxts_rev, hprev_rev) = jax.lax.scan(
+        bwd_step, (dc_f, dn_f, dm_f, dh_f), xs_rev)
+    dwx4s = dxts_rev[::-1]
+    hprevs = hprev_rev[::-1]
+    # dR in ONE contraction over (steps x batch) — a single all-reduce
+    B = wx4s.shape[1]
+    # g = xt + rec, so d(rec) = d(g) = dwx4s; regroup gate-major -> per-head
+    drec5 = dwx4s.reshape(S, B, 4, NH, dh)
+    dr4 = jnp.einsum("sbhd,sbghf->hdgf", hprevs.reshape(S, B, NH, dh), drec5)
+    dr = dr4.reshape(NH, dh, 4 * dh)
+    return dwx4s, dr, dc0, dn0, dm0, dh0
+
+
+_slstm_scan_core.defvjp(_slstm_scan_core_fwd, _slstm_scan_core_bwd)
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        period = cfg.slstm_period or cfg.n_layers
+        assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+        self.n_sup = cfg.n_layers // period
+        self.pm = period - 1 if cfg.slstm_period else period  # mLSTM layers per sup
+        self.has_slstm = bool(cfg.slstm_period)
+        self.pd = int(cfg.mlstm_proj_factor * cfg.d_model)
+        self.nh = cfg.n_heads
+        self.dv = self.pd // self.nh
+        self.dk = max(self.dv // 2, 1)
+        self.dh = cfg.d_model // self.nh
+        # sLSTM MLP width: 4/3 * D rounded down to a multiple of 128 (>=128)
+        self.fs = max((int(4 * cfg.d_model / 3) // 128) * 128, 128)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        cfg = self.cfg
+        f = ParamFactory(key, dtype=cfg.dtype)
+        D, pD, NH, dk, dv, w = cfg.d_model, self.pd, self.nh, self.dk, self.dv, cfg.conv_width
+        NS, PM = self.n_sup, self.pm
+        m = {
+            "ln": f.ones((NS, PM, D), ("sup", "layers", "embed")),
+            "w_up": f.dense((NS, PM, D, 2 * pD), ("sup", "layers", "embed", "mlp")),
+            "conv": f.dense((NS, PM, w, pD), ("sup", "layers", None, "mlp"), scale=0.5),
+            "wq": f.dense((NS, PM, pD, NH * dk), ("sup", "layers", "mlp", "heads_flat")),
+            "wk": f.dense((NS, PM, pD, NH * dk), ("sup", "layers", "mlp", "heads_flat")),
+            "wv": f.dense((NS, PM, pD, NH * dv), ("sup", "layers", "mlp", "mlp")),
+            "w_if": f.dense((NS, PM, pD, 2 * NH), ("sup", "layers", "mlp", None)),
+            "b_if": f.value(
+                jnp.tile(jnp.array([1.0] * NH + [3.0] * NH, jnp.float32), (NS, PM, 1)),
+                ("sup", "layers", None),
+            ),  # bias forget gates open, input gates mildly open
+            "w_down": f.dense((NS, PM, pD, D), ("sup", "layers", "mlp", "embed")),
+        }
+        tree = {"m": m, "embed": f.dense((cfg.padded_vocab, D), ("vocab", "embed"), scale=0.02),
+                "ln_f": f.ones((D,), ("embed",)),
+                "unembed": f.dense((cfg.padded_vocab, D), ("vocab", "embed"))}
+        if self.has_slstm:
+            dh = self.dh
+            tree["s"] = {
+                "ln": f.ones((NS, D), ("sup", "embed")),
+                "conv": f.dense((NS, w, D), ("sup", None, "embed"), scale=0.5),
+                "w": f.dense((NS, D, 4 * D), ("sup", "embed", "mlp")),
+                "r": f.dense((NS, NH, dh, 4 * dh), ("sup", "heads", None, None)),
+                "b": f.value(
+                    jnp.tile(
+                        jnp.concatenate([
+                            jnp.zeros((D,)), jnp.zeros((D,)),
+                            3.0 * jnp.ones((D,)), jnp.zeros((D,))]).astype(jnp.float32),
+                        (NS, 1),
+                    ),
+                    ("sup", None),
+                ),
+                "ln2": f.ones((NS, D), ("sup", "embed")),
+                "w_mlp_up": f.dense((NS, D, self.fs), ("sup", "embed", "mlp")),
+                "w_mlp_down": f.dense((NS, self.fs, D), ("sup", "mlp", "embed")),
+            }
+        return split_tree(tree)
+
+    # --------------------------------------------------------- mLSTM (train)
+    def _mlstm_chunkwise(self, q, k, v, li, lf):
+        """Chunkwise-parallel mLSTM scan.
+
+        q,k: (B, S, NH, dk); v: (B, S, NH, dv); li/lf: (B, S, NH) log-gates (<=0).
+        Returns h: (B, S, NH, dv).
+        """
+        B, S, NH, dk = q.shape
+        dv = v.shape[-1]
+        W = CHUNK
+        while S % W != 0:
+            W //= 2
+        nC = S // W
+        scale = dk**-0.5
+        # bf16 operands + fp32 accumulation: MXU-native, halves HBM traffic
+        qc = (q.reshape(B, nC, W, NH, dk) * scale).astype(q.dtype)
+        kc = k.reshape(B, nC, W, NH, dk)
+        vc = v.reshape(B, nC, W, NH, dv)
+        lic = li.reshape(B, nC, W, NH)
+        lfc = lf.reshape(B, nC, W, NH)
+        causal = jnp.tril(jnp.ones((W, W), bool))
+
+        def chunk_body(carry, xs):
+            C, n = carry  # (B, NH, dk, dv), (B, NH, dk)
+            qq, kk, vv, ll_i, ll_f = xs  # (B, W, NH, *)
+            F = jnp.cumsum(ll_f, axis=1)  # (B, W, NH) decay from chunk start
+            # intra-chunk: weight(t, s) = exp(F_t - F_s + li_s), s <= t
+            logits = jnp.einsum("bthd,bshd->bhts", qq, kk,
+                                preferred_element_type=jnp.float32)
+            wts = F[:, :, None, :] - F[:, None, :, :] + ll_i[:, None, :, :]  # (B,t,s,NH)
+            wts = jnp.where(causal[None, :, :, None], wts, -jnp.inf)
+            intra = jnp.einsum(
+                "bhts,bshv->bthv",
+                (logits * jnp.exp(wts).transpose(0, 3, 1, 2)).astype(qq.dtype),
+                vv, preferred_element_type=jnp.float32)
+            # inter-chunk: q_t reads the incoming state decayed by exp(F_t)
+            inter = jnp.einsum("bthd,bhdv->bthv",
+                               qq.astype(jnp.float32) * jnp.exp(F)[..., None], C)
+            # normalizer
+            n_run = jnp.exp(F)[..., None] * n[:, None] + jnp.einsum(
+                "bhts,bshd->bthd", jnp.exp(wts).transpose(0, 3, 1, 2),
+                kk.astype(jnp.float32))
+            denom = jnp.abs(jnp.einsum("bthd,bthd->bth",
+                                       qq.astype(jnp.float32), n_run))
+            h = (intra + inter) / jnp.maximum(denom, 1.0)[..., None]
+            # state update to end of chunk
+            Fw = F[:, -1, :]  # (B, NH)
+            decay_s = jnp.exp(Fw[:, None] - F + ll_i)  # (B, W, NH)
+            C = jnp.exp(Fw)[..., None, None] * C + jnp.einsum(
+                "bshd,bsh,bshv->bhdv", kk.astype(jnp.float32), decay_s,
+                vv.astype(jnp.float32))
+            n = jnp.exp(Fw)[..., None] * n + jnp.einsum(
+                "bshd,bsh->bhd", kk.astype(jnp.float32), decay_s)
+            return (C, n), h
+
+        C0 = jnp.zeros((B, NH, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, NH, dk), jnp.float32)
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qc, kc, vc, lic, lfc))
+        (_, _), hs = jax.lax.scan(chunk_body, (C0, n0), xs)
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, NH, dv)
+        return h.astype(q.dtype)
+
+    def _mlstm_chunkwise_stateful(self, q, k, v, li, lf, C0, n0):
+        """Same as above but threads an incoming state (prefill path)."""
+        B, S, NH, dk = q.shape
+        dv = v.shape[-1]
+        W = CHUNK
+        while S % W != 0:
+            W //= 2
+        nC = S // W
+        scale = dk**-0.5
+        # bf16 operands + fp32 accumulation: MXU-native, halves HBM traffic
+        qc = (q.reshape(B, nC, W, NH, dk) * scale).astype(q.dtype)
+        kc = k.reshape(B, nC, W, NH, dk)
+        vc = v.reshape(B, nC, W, NH, dv)
+        lic = li.reshape(B, nC, W, NH)
+        lfc = lf.reshape(B, nC, W, NH)
+        causal = jnp.tril(jnp.ones((W, W), bool))
+
+        def chunk_body(carry, xs):
+            C, n = carry
+            qq, kk, vv, ll_i, ll_f = xs
+            F = jnp.cumsum(ll_f, axis=1)
+            logits = jnp.einsum("bthd,bshd->bhts", qq, kk,
+                                preferred_element_type=jnp.float32)
+            wts = F[:, :, None, :] - F[:, None, :, :] + ll_i[:, None, :, :]
+            wts = jnp.where(causal[None, :, :, None], wts, -jnp.inf)
+            intra = jnp.einsum(
+                "bhts,bshv->bthv",
+                (logits * jnp.exp(wts).transpose(0, 3, 1, 2)).astype(qq.dtype),
+                vv, preferred_element_type=jnp.float32)
+            inter = jnp.einsum("bthd,bhdv->bthv",
+                               qq.astype(jnp.float32) * jnp.exp(F)[..., None], C)
+            n_run = jnp.exp(F)[..., None] * n[:, None] + jnp.einsum(
+                "bhts,bshd->bthd", jnp.exp(wts).transpose(0, 3, 1, 2),
+                kk.astype(jnp.float32))
+            denom = jnp.abs(jnp.einsum("bthd,bthd->bth",
+                                       qq.astype(jnp.float32), n_run))
+            h = (intra + inter) / jnp.maximum(denom, 1.0)[..., None]
+            Fw = F[:, -1, :]
+            decay_s = jnp.exp(Fw[:, None] - F + ll_i)
+            C = jnp.exp(Fw)[..., None, None] * C + jnp.einsum(
+                "bshd,bsh,bshv->bhdv", kk.astype(jnp.float32), decay_s,
+                vv.astype(jnp.float32))
+            n = jnp.exp(Fw)[..., None] * n + jnp.einsum(
+                "bshd,bsh->bhd", kk.astype(jnp.float32), decay_s)
+            return (C, n), h
+
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qc, kc, vc, lic, lfc))
+        (C1, n1), hs = jax.lax.scan(chunk_body, (C0, n0), xs)
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, NH, dv)
+        return h.astype(q.dtype), C1, n1
+
+    # ------------------------------------------------------------- mLSTM block
+    def _mlstm_qkvif(self, xm, xc, lp):
+        """q, k, gates from the conv branch ``xc``; v from the raw branch ``xm``."""
+        B, S, _ = xm.shape
+        NH, dk, dv = self.nh, self.dk, self.dv
+        q = jnp.einsum("bsp,pf->bsf", xc, lp["wq"]).reshape(B, S, NH, dk)
+        k = jnp.einsum("bsp,pf->bsf", xc, lp["wk"]).reshape(B, S, NH, dk)
+        v = jnp.einsum("bsp,pf->bsf", xm, lp["wv"]).reshape(B, S, NH, dv)
+        # bf16 operands, fp32 accumulation: keeps d(xc) in bf16 (the f32 gate
+        # path otherwise drags 1 GiB f32 all-reduces through the backward)
+        gf = jnp.einsum("bsp,pg->bsg", xc, lp["w_if"].astype(xc.dtype),
+                        preferred_element_type=jnp.float32)
+        gf = gf + lp["b_if"].astype(jnp.float32)
+        li = jax.nn.log_sigmoid(gf[..., :NH])
+        lf = jax.nn.log_sigmoid(gf[..., NH:])
+        return q, k, v, li, lf
+
+    def _mlstm_block_train(self, h, lp):
+        cfg = self.cfg
+        B, S, D = h.shape
+        h = constrain(h, ACT3)
+        hn = rms_norm(h, lp["ln"])
+        up = jnp.einsum("bsd,dp->bsp", hn, lp["w_up"])
+        xm, z = jnp.split(up, 2, axis=-1)
+        xm, z = constrain(xm, ACT_P), constrain(z, ACT_P)
+        xc = jax.nn.silu(_causal_depthwise_conv(xm, lp["conv"]))
+        q, k, v, li, lf = self._mlstm_qkvif(xm, xc, lp)
+        ht = self._mlstm_chunkwise(q, k, v, li, lf)  # (B,S,NH,dv)
+        out = constrain(ht.reshape(B, S, -1), ACT_P) * jax.nn.silu(z)
+        return h + jnp.einsum("bsp,pd->bsd", out, lp["w_down"])
+
+    # ------------------------------------------------------------- sLSTM block
+    def _slstm_scan(self, x, sp, c0, n0, m0, h0):
+        """x: (B, S, D) conv output. Sequential scan over time.
+
+        The big gate projection runs TP-sharded *outside* the scan; its
+        output is then regrouped (B, S, 4, D) and pinned replicated-on-model
+        BEFORE entering the scan — otherwise every per-step gate slice of a
+        model-sharded (B, 4D) tensor reshards inside the 4096-iteration loop
+        (measured: that single effect made this family the most
+        collective-bound cell of the whole zoo; see EXPERIMENTS.md §Perf).
+        """
+        cfg = self.cfg
+        B, S, D = x.shape
+        NH, dh = self.nh, self.dh
+
+        wx = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), sp["w"].astype(jnp.float32))
+        wx = wx + sp["b"].astype(jnp.float32)  # (B, S, 4D)
+        wx4 = constrain(wx.reshape(B, S, 4, D), ("batch", None, None, None))
+
+        (c1, n1, m1, h1), hs = _slstm_scan_core(
+            jnp.moveaxis(wx4, 1, 0), sp["r"].astype(jnp.float32),
+            c0, n0, m0, h0, NH, dh)
+        return jnp.moveaxis(hs, 0, 1), (c1, n1, m1, h1)
+
+    def _slstm_block_train(self, h, sp):
+        cfg = self.cfg
+        B, S, D = h.shape
+        hn = rms_norm(h, sp["ln"])
+        xc = jax.nn.silu(_causal_depthwise_conv(hn, sp["conv"]))
+        z = jnp.zeros((B, D), jnp.float32)
+        hs, _ = self._slstm_scan(xc, sp, z, z, jnp.full_like(z, -1e9), z)
+        h = h + hs.astype(h.dtype)
+        hn = rms_norm(h, sp["ln2"])
+        mlp = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(
+            jnp.einsum("bsd,df->bsf", hn, sp["w_mlp_up"]), approximate=True), sp["w_mlp_down"])
+        return h + mlp
+
+    # ----------------------------------------------------------------- train
+    def _forward_train(self, params, batch):
+        cfg = self.cfg
+        h = params["embed"][batch["tokens"]].astype(cfg.dtype)
+
+        def sup_body(carry, xs):
+            hh = carry
+            if self.has_slstm:
+                mp, sp = xs
+            else:
+                (mp,) = xs
+
+            def m_body(c, lp):
+                return self._mlstm_block_train(c, lp), None
+
+            hh, _ = jax.lax.scan(m_body, hh, mp)
+            if self.has_slstm:
+                hh = self._slstm_block_train(hh, sp)
+            return hh, None
+
+        xs = (params["m"], params["s"]) if self.has_slstm else (params["m"],)
+        h, _ = jax.lax.scan(maybe_remat(sup_body, cfg.remat_policy), h, xs)
+        h = rms_norm(h, params["ln_f"])
+        logits = jnp.einsum("bsd,vd->bsv", h, params["unembed"])
+        if cfg.padded_vocab != cfg.vocab:
+            pad = cfg.padded_vocab - cfg.vocab
+            neg = jnp.full((*logits.shape[:-1], pad), -1e9, logits.dtype)
+            logits = jnp.concatenate([logits[..., : cfg.vocab], neg], axis=-1)
+        return logits
+
+    def loss(self, params, batch):
+        logits = self._forward_train(params, batch)
+        labels = batch["labels"]
+        return softmax_cross_entropy(logits, jnp.maximum(labels, 0), labels >= 0)
+
+    # ----------------------------------------------------------------- serve
+    def make_caches(self, batch: int, s_max: int, *, abstract: bool = False):
+        cfg = self.cfg
+        NS, PM, NH, dk, dv = self.n_sup, self.pm, self.nh, self.dk, self.dv
+        D, pD, w = cfg.d_model, self.pd, cfg.conv_width
+        shapes = dict(
+            m_C=((NS, PM, batch, NH, dk, dv), jnp.float32),
+            m_n=((NS, PM, batch, NH, dk), jnp.float32),
+            m_conv=((NS, PM, batch, w - 1, pD), cfg.dtype),
+            s_c=((NS, batch, D), jnp.float32),
+            s_n=((NS, batch, D), jnp.float32),
+            s_m=((NS, batch, D), jnp.float32),
+            s_h=((NS, batch, D), jnp.float32),
+            s_conv=((NS, batch, w - 1, D), cfg.dtype),
+            length=((batch,), jnp.int32),
+        )
+        if abstract:
+            vals = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+        else:
+            vals = {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+            vals["s_m"] = jnp.full_like(vals["s_m"], -1e9)
+        return XLSTMState(**vals)
+
+    def cache_axes(self):
+        return XLSTMState(
+            m_C=("sup", "layers", "batch", "heads", "head_dim", "mlp"),
+            m_n=("sup", "layers", "batch", "heads", "head_dim"),
+            m_conv=("sup", "layers", "batch", None, "mlp"),
+            s_c=("sup", "batch", "embed"),
+            s_n=("sup", "batch", "embed"),
+            s_m=("sup", "batch", "embed"),
+            s_h=("sup", "batch", "embed"),
+            s_conv=("sup", "batch", None, "embed"),
+            length=("batch",),
+        )
+
+    def _decode_mlstm(self, h, lp, C, n, conv_tail):
+        """Single-token mLSTM update. h: (B, 1, D)."""
+        B = h.shape[0]
+        NH, dk, dv = self.nh, self.dk, self.dv
+        hn = rms_norm(h[:, 0], lp["ln"])
+        up = jnp.einsum("bd,dp->bp", hn, lp["w_up"])
+        xm, z = jnp.split(up, 2, axis=-1)
+        xc, conv_tail = _conv_step(xm, conv_tail, lp["conv"])
+        xc = jax.nn.silu(xc)
+        q = jnp.einsum("bp,pf->bf", xc, lp["wq"]).reshape(B, NH, dk).astype(jnp.float32)
+        k = jnp.einsum("bp,pf->bf", xc, lp["wk"]).reshape(B, NH, dk).astype(jnp.float32)
+        v = jnp.einsum("bp,pf->bf", xm, lp["wv"]).reshape(B, NH, dv).astype(jnp.float32)
+        gf = jnp.einsum("bp,pg->bg", xc.astype(jnp.float32),
+                        lp["w_if"].astype(jnp.float32)) + lp["b_if"].astype(jnp.float32)
+        i_ = jnp.exp(jax.nn.log_sigmoid(gf[:, :NH]))
+        f_ = jnp.exp(jax.nn.log_sigmoid(gf[:, NH:]))
+        C = f_[..., None, None] * C + i_[..., None, None] * jnp.einsum("bhd,bhv->bhdv", k, v)
+        n = f_[..., None] * n + i_[..., None] * k
+        q = q * (dk**-0.5)
+        num = jnp.einsum("bhd,bhdv->bhv", q, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+        ht = (num / jnp.maximum(den, 1.0)[..., None]).astype(h.dtype)
+        out = ht.reshape(B, -1) * jax.nn.silu(z)
+        return h + jnp.einsum("bp,pd->bd", out, lp["w_down"])[:, None], C, n, conv_tail
+
+    def _decode_slstm(self, h, sp, c, n, m, hprev, conv_tail):
+        B = h.shape[0]
+        D = self.cfg.d_model
+        hn = rms_norm(h[:, 0], sp["ln"])
+        xc, conv_tail = _conv_step(hn, conv_tail, sp["conv"])
+        xc = jax.nn.silu(xc)
+        wx = jnp.einsum("bd,dg->bg", xc.astype(jnp.float32), sp["w"].astype(jnp.float32))
+        wx = wx + sp["b"].astype(jnp.float32)
+        hs, (c, n, m, hprev) = self._slstm_step(wx, sp, c, n, m, hprev)
+        h = h + hs[:, None].astype(h.dtype)
+        hn = rms_norm(h[:, 0], sp["ln2"])
+        mlp = jnp.einsum("bf,fd->bd", jax.nn.gelu(
+            jnp.einsum("bd,df->bf", hn, sp["w_mlp_up"]), approximate=True), sp["w_mlp_down"])
+        return h + mlp[:, None], c, n, m, hprev, conv_tail
+
+    def _slstm_step(self, wx, sp, c, n, m, hprev):
+        B = wx.shape[0]
+        D = self.cfg.d_model
+        NH, dh = self.nh, self.dh
+        hheads = hprev.reshape(B, NH, dh)
+        rec = jnp.einsum("bhd,hdg->bhg", hheads, sp["r"].astype(jnp.float32))
+        rec4 = rec.reshape(B, NH, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * D)
+        g = wx + rec4
+        zt = jnp.tanh(g[:, :D])
+        it = g[:, D : 2 * D]
+        ft = g[:, 2 * D : 3 * D]
+        ot = jax.nn.sigmoid(g[:, 3 * D :])
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        c_new = f_ * c + i_ * zt
+        n_new = f_ * n + i_
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return h_new, (c_new, n_new, m_new, h_new)
+
+    def decode_step(self, params, state: XLSTMState, tokens):
+        cfg = self.cfg
+        h = params["embed"][tokens].astype(cfg.dtype)  # (B, 1, D)
+
+        def sup_body(carry, xs):
+            hh = carry
+            if self.has_slstm:
+                mp, sp, mC, mn, mcv, sc, sn, sm, sh, scv = xs
+            else:
+                mp, mC, mn, mcv = xs
+
+            def m_body(c, x):
+                lp, C, n, tail = x
+                c, C, n, tail = self._decode_mlstm(c, lp, C, n, tail)
+                return c, (C, n, tail)
+
+            hh, (mC, mn, mcv) = jax.lax.scan(m_body, hh, (mp, mC, mn, mcv))
+            if self.has_slstm:
+                hh, sc, sn, sm, sh, scv = self._decode_slstm(hh, sp, sc, sn, sm, sh, scv)
+                return hh, (mC, mn, mcv, sc, sn, sm, sh, scv)
+            return hh, (mC, mn, mcv)
+
+        if self.has_slstm:
+            xs = (params["m"], params["s"], state.m_C, state.m_n, state.m_conv,
+                  state.s_c, state.s_n, state.s_m, state.s_h, state.s_conv)
+            h, (mC, mn, mcv, sc, sn, sm, sh, scv) = jax.lax.scan(sup_body, h, xs)
+            new = state._replace(m_C=mC, m_n=mn, m_conv=mcv, s_c=sc, s_n=sn,
+                                 s_m=sm, s_h=sh, s_conv=scv, length=state.length + 1)
+        else:
+            xs = (params["m"], state.m_C, state.m_n, state.m_conv)
+            h, (mC, mn, mcv) = jax.lax.scan(sup_body, h, xs)
+            new = state._replace(m_C=mC, m_n=mn, m_conv=mcv, length=state.length + 1)
+
+        h = rms_norm(h, params["ln_f"])
+        logits = jnp.einsum("bsd,vd->bsv", h, params["unembed"])
+        if cfg.padded_vocab != cfg.vocab:
+            logits = logits[..., : cfg.vocab]
+        return logits, new
+
+    def prefill(self, params, state: XLSTMState, batch):
+        """Process a prompt and return (last_logits, state).
+
+        Runs the chunkwise-parallel form token-exactly; conv tails and sLSTM
+        states are threaded through. For simplicity the prompt is processed by
+        repeated decode over the last (conv_width-1) tokens after a chunkwise
+        main pass would be needed for conv continuity; instead we process the
+        whole prompt with the train-form conv (correct for a fresh state) and
+        capture the final recurrent states by scanning per super-block.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = params["embed"][tokens].astype(cfg.dtype)
+
+        def sup_body(carry, xs):
+            hh = carry
+            if self.has_slstm:
+                mp, sp = xs
+            else:
+                (mp,) = xs
+
+            def m_body(c, lp):
+                hn = rms_norm(c, lp["ln"])
+                up = jnp.einsum("bsd,dp->bsp", hn, lp["w_up"])
+                xm, z = jnp.split(up, 2, axis=-1)
+                xc = jax.nn.silu(_causal_depthwise_conv(xm, lp["conv"]))
+                q, k, v, li, lf = self._mlstm_qkvif(xm, xc, lp)
+                C0 = jnp.zeros((B, self.nh, self.dk, self.dv), jnp.float32)
+                n0 = jnp.zeros((B, self.nh, self.dk), jnp.float32)
+                ht, C1, n1 = self._mlstm_chunkwise_stateful(q, k, v, li, lf, C0, n0)
+                out = ht.reshape(B, S, -1) * jax.nn.silu(z)
+                c = c + jnp.einsum("bsp,pd->bsd", out, lp["w_down"])
+                tail = xm[:, S - (cfg.conv_width - 1) :, :]  # conv context for decode
+                return c, (C1, n1, tail)
+
+            hh, (mC, mn, mcv) = jax.lax.scan(m_body, hh, mp)
+            if self.has_slstm:
+                hn = rms_norm(hh, sp["ln"])
+                tail_s = hn[:, S - (cfg.conv_width - 1) :, :]  # conv context for decode
+                xc = jax.nn.silu(_causal_depthwise_conv(hn, sp["conv"]))
+                D = cfg.d_model
+                z = jnp.zeros((B, D), jnp.float32)
+                hs, (c1, n1, m1, h1) = self._slstm_scan(
+                    xc, sp, z, z, jnp.full_like(z, -1e9), z)
+                hh = hh + hs.astype(hh.dtype)
+                hn2 = rms_norm(hh, sp["ln2"])
+                mlp = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(
+                    jnp.einsum("bsd,df->bsf", hn2, sp["w_mlp_up"]), approximate=True),
+                    sp["w_mlp_down"])
+                hh = hh + mlp
+                return hh, (mC, mn, mcv, c1, n1, m1, h1, tail_s)
+            return hh, (mC, mn, mcv)
+
+        xs = (params["m"], params["s"]) if self.has_slstm else (params["m"],)
+        if self.has_slstm:
+            h, (mC, mn, mcv, sc, sn, sm, sh, scv) = jax.lax.scan(sup_body, h, xs)
+            new = state._replace(m_C=mC, m_n=mn, m_conv=mcv, s_c=sc, s_n=sn, s_m=sm,
+                                 s_h=sh, s_conv=scv, length=state.length + S)
+        else:
+            h, (mC, mn, mcv) = jax.lax.scan(sup_body, h, xs)
+            new = state._replace(m_C=mC, m_n=mn, m_conv=mcv, length=state.length + S)
+        h = rms_norm(h[:, -1:], params["ln_f"])
+        logits = jnp.einsum("bsd,vd->bsv", h, params["unembed"])
+        if cfg.padded_vocab != cfg.vocab:
+            logits = logits[..., : cfg.vocab]
+        return logits, new

@@ -1,0 +1,57 @@
+"""Serving engine: prefill/decode step builders + cache sharding policy.
+
+The KV-cache sharding policy (documented in DESIGN.md §Distribution):
+  - batch over ("pod", "data")
+  - kv_heads over "model" when the head count divides the axis
+  - otherwise the cache *sequence* dim is sharded over "model"
+    ("seq_sharded" logical axis) — attention contracts over sequence, so XLA
+    partial-reduces per shard and all-reduces the (small) output, which is
+    both memory-balanced and correct for wrapped window caches.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.distributed.sharding import SERVE_RULES, plan_tree
+
+PyTree = Any
+
+__all__ = ["cache_axes_for_mesh", "serve_shardings", "build_prefill", "build_decode"]
+
+
+def cache_axes_for_mesh(model, mesh) -> PyTree:
+    """Model cache axes, with the kv_heads->seq fallback applied mesh-wide."""
+    axes = model.cache_axes()
+    msize = mesh.shape.get("model", 1)
+    kvh = model.cfg.n_kv_heads
+    if msize > 1 and kvh % msize != 0:
+        def swap(t):
+            return tuple("seq_sharded" if a == "seq" else a for a in t)
+
+        axes = jax.tree_util.tree_map(
+            swap, axes, is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x))
+    return axes
+
+
+def serve_shardings(mesh, model, params_abstract, axes_tree, cache_abstract):
+    """(param_shardings, cache_shardings) for serving on ``mesh``."""
+    p_sh = plan_tree(mesh, params_abstract, axes_tree, SERVE_RULES)
+    c_sh = plan_tree(mesh, cache_abstract, cache_axes_for_mesh(model, mesh), SERVE_RULES)
+    return p_sh, c_sh
+
+
+def build_prefill(model):
+    def prefill_step(params, cache, batch):
+        return model.prefill(params, cache, batch)
+
+    return prefill_step
+
+
+def build_decode(model):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step

@@ -1,0 +1,111 @@
+"""HLO static-analyzer tests: trip-count awareness, flop accounting vs
+analytic, collective parsing (both replica-group formats)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.analysis.hlo import CollectiveOp, type_bytes
+
+
+def test_type_bytes():
+    assert type_bytes("bf16[4,8]{1,0}") == 64
+    assert type_bytes("f32[2,3]") == 24
+    assert type_bytes("(s32[], bf16[2,2]{1,0}, f32[4]{0})") == 4 + 8 + 16
+    assert type_bytes("pred[]") == 1
+
+
+def test_wire_bytes_model():
+    ar = CollectiveOp("all-reduce", 1000, 1000, 4, 2)
+    assert ar.wire_bytes == int(2 * 3 / 4 * 1000) * 2
+    ag = CollectiveOp("all-gather", 250, 1000, 4, 1)
+    assert ag.wire_bytes == int(3 / 4 * 1000)
+    cp = CollectiveOp("collective-permute", 500, 500, 2, 3)
+    assert cp.wire_bytes == 1500
+
+
+def _run_sub(body: str) -> dict:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_scan_unroll_invariance_and_analytic_flops():
+    r = _run_sub("""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.analysis.hlo import analyze_hlo
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        L, D, B = 4, 64, 8
+        w = jax.ShapeDtypeStruct((L, D, D), jnp.bfloat16)
+        x = jax.ShapeDtypeStruct((B, D), jnp.bfloat16)
+        def f_scan(w, x):
+            def body(c, wl): return jnp.dot(c, wl), None
+            y, _ = jax.lax.scan(body, x, w)
+            return jnp.sum(y)
+        def f_unroll(w, x):
+            for l in range(L):
+                x = jnp.dot(x, w[l])
+            return jnp.sum(x)
+        ws = NamedSharding(mesh, P(None, "data", "model"))
+        xs = NamedSharding(mesh, P(("pod", "data"), "model"))
+        res = {}
+        for name, f in [("scan", f_scan), ("unroll", f_unroll)]:
+            comp = jax.jit(f, in_shardings=(ws, xs)).lower(w, x).compile()
+            a = analyze_hlo(comp.as_text(), total_devices=8)
+            res[name] = {"flops": a.flops,
+                         "coll_bytes": a.collective_operand_bytes,
+                         "counts": a.collective_counts()}
+        res["analytic_per_dev"] = 2 * B * D * D * L / 8
+        print(json.dumps(res))
+    """)
+    assert r["scan"]["flops"] == r["unroll"]["flops"]
+    assert r["scan"]["flops"] == r["analytic_per_dev"]
+    assert r["scan"]["coll_bytes"] == r["unroll"]["coll_bytes"]
+    # scan counted all-gathers trip_mult times
+    assert r["scan"]["counts"].get("all-gather", 0) >= 4
+
+
+def test_group_decoding():
+    from repro.comm.extract import decode_groups, decode_pairs
+
+    c = CollectiveOp("all-reduce", 10, 10, 2, 1, metadata="{{0,1},{2,3}}")
+    assert decode_groups(c, 4) == [[0, 1], [2, 3]]
+    c2 = CollectiveOp("all-gather", 10, 40, 4, 1, metadata="[2,4]<=[8]")
+    assert decode_groups(c2, 8) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    c3 = CollectiveOp("all-gather", 10, 20, 2, 1, metadata="[2,2]<=[2,2]T(1,0)")
+    assert decode_groups(c3, 4) == [[0, 2], [1, 3]]
+    c4 = CollectiveOp("collective-permute", 8, 8, 2, 1,
+                      metadata="|st={0,1},{1,0}")
+    assert decode_pairs(c4) == [(0, 1), (1, 0)]
+
+
+def test_block_demand_matrices():
+    from repro.comm.coflows import BlockMap, collective_demands
+
+    bmap = BlockMap.from_mesh_shape({"pod": 2, "data": 2, "model": 2},
+                                    ("pod", "data"))
+    assert bmap.n_blocks == 4 and bmap.n_devices == 8
+    # devices 0,1 -> block 0; 2,3 -> block 1; 4,5 -> block 2; 6,7 -> block 3
+    np.testing.assert_array_equal(bmap.block_of, [0, 0, 1, 1, 2, 2, 3, 3])
+    # ring all-reduce over all 8 devices: edges cross blocks at 0->..->7->0
+    c = CollectiveOp("all-reduce", 800, 800, 8, 1, metadata="[1,8]<=[8]")
+    D = collective_demands(c, bmap)
+    per_dev = 2 * 800 * 7 / 8
+    # ring edges: (1,2),(3,4),(5,6),(7,0) cross blocks
+    assert D[0, 1] == per_dev and D[1, 2] == per_dev and D[3, 0] == per_dev
+    assert D[0, 0] == 0  # intra-block traffic not on the OCS layer
+    # all-to-all within one block only -> empty demand
+    c2 = CollectiveOp("all-to-all", 100, 100, 2, 1, metadata="{{0,1}}")
+    assert collective_demands(c2, bmap).sum() == 0

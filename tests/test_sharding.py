@@ -1,0 +1,87 @@
+"""Sharding planner unit tests (pure logic — runs on 1 device with an
+AbstractMesh; no device allocation)."""
+import jax
+import numpy as np
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    batch_spec,
+    plan_sharding,
+)
+
+MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH_SINGLE = AbstractMesh((16, 16), ("data", "model"))
+
+
+def spec(mesh, shape, axes, rules=TRAIN_RULES):
+    return plan_sharding(mesh, shape, axes, rules).spec
+
+
+def test_tp_and_fsdp_dims():
+    # llama wq (L, D, H*dh): layers replicated, embed->data, heads_flat->model
+    assert spec(MESH, (22, 2048, 2048), ("layers", "embed", "heads_flat")) == \
+        P(None, "data", "model")
+
+
+def test_vocab_tp():
+    assert spec(MESH, (32000, 2048), ("vocab", "embed")) == P("model", "data")
+
+
+def test_indivisible_head_fallback():
+    # qwen1.5-4b's FLATTENED projection dim (20 heads x 128 = 2560) divides
+    # the 16-way model axis, so kernel TP still applies...
+    assert spec(MESH, (40, 2560, 2560), ("layers", "embed", "heads_flat")) == \
+        P(None, "data", "model")
+    # ...but a head-COUNT dim (20) does not -> replicated (activation q/k/v)
+    assert spec(MESH, (64, 4096, 20, 128), ("batch", None, "heads", None)) == \
+        P(("pod", "data"), None, None, None)
+
+
+def test_no_axis_reuse_within_array():
+    # both dims want "model": only the first gets it
+    s = spec(MESH, (1536, 4096), ("mlp", "vocab"))
+    used = [a for a in s if a == "model"]
+    assert len(used) == 1
+
+
+def test_batch_over_pod_and_data():
+    s = batch_spec(MESH, 2, 256).spec
+    assert s == P(("pod", "data"), None)
+    s1 = batch_spec(MESH_SINGLE, 2, 256).spec
+    assert s1 == P("data", None)
+
+
+def test_batch_indivisible_falls_back():
+    # global_batch=1 (long_500k) cannot shard over 32
+    s = batch_spec(MESH, 2, 1).spec
+    assert s == P(None, None)
+
+
+def test_serve_rules_no_fsdp():
+    assert spec(MESH, (32000, 2048), ("vocab", "embed"), SERVE_RULES) == \
+        P("model", None)
+
+
+def test_experts_tp():
+    assert spec(MESH, (94, 128, 4096, 1536),
+                ("layers", "experts", "embed", "mlp")) == \
+        P(None, "model", "data", None)
+
+
+def test_kv_seq_fallback_logic():
+    """serve engine: kv_heads indivisible -> cache seq sharded over model."""
+    from repro.configs import get_arch
+    from repro.models.api import build_model
+    from repro.serve.engine import cache_axes_for_mesh
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    m = build_model(get_arch("tinyllama-1.1b").config)  # kv=4, no divide 16
+    axes = cache_axes_for_mesh(m, FakeMesh())
+    assert "seq_sharded" in axes.k
+    m2 = build_model(get_arch("stablelm-1.6b").config)  # kv=32 divides 16
+    axes2 = cache_axes_for_mesh(m2, FakeMesh())
+    assert "seq_sharded" not in axes2.k and "seq" in axes2.k

@@ -1,0 +1,124 @@
+"""End-to-end system tests: train -> checkpoint -> restore -> serve, plus
+serve-path consistency against the train-form forward for each cache type."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.train import train_loop
+from repro.models.api import ModelConfig, build_model
+from repro.train.optimizer import OptimizerConfig
+
+
+def test_train_checkpoint_restore_serve(tmp_path):
+    cfg = get_arch("tinyllama-1.1b").smoke
+    run = train_loop(cfg, steps=24, global_batch=4, seq_len=64,
+                     opt_cfg=OptimizerConfig(lr=1e-3, total_steps=24,
+                                             warmup_steps=2),
+                     ckpt_dir=str(tmp_path), ckpt_every=8, log_every=0)
+    first = np.mean([h["loss"] for h in run.history[:6]])
+    last = np.mean([h["loss"] for h in run.history[-6:]])
+    assert last < first, (first, last)  # the model actually learns
+
+    # resume from checkpoint continues the loss trajectory
+    run2 = train_loop(cfg, steps=30, global_batch=4, seq_len=64,
+                      opt_cfg=OptimizerConfig(lr=1e-3, total_steps=30,
+                                              warmup_steps=2),
+                      ckpt_dir=str(tmp_path), ckpt_every=8, log_every=0)
+    assert run2.steps_done == 30
+    resumed = np.mean([h["loss"] for h in run2.history[:3]])
+    assert resumed < first  # started from trained weights, not scratch
+
+    # serve the trained model
+    model = run2.model
+    cache = model.make_caches(2, 32)
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    logits, cache = jax.jit(model.prefill)(run2.params, cache,
+                                           {"tokens": tokens})
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, _ = jax.jit(model.decode_step)(run2.params, cache, tok)
+    assert logits2.shape == (2, 1, cfg.vocab)
+
+
+def _decode_matches_forward(cfg, batch_extra=None, steps=3, atol=6e-2):
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    kw = {"s_src": 8} if cfg.family == "audio" else {}
+    cache = model.make_caches(B, S + steps, **kw)
+    batch = {"tokens": tokens, **(batch_extra or {})}
+    logits, cache = jax.jit(model.prefill)(params, cache, batch)
+    seq = tokens
+    dec = jax.jit(model.decode_step)
+    for _ in range(steps):
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        seq = jnp.concatenate([seq, nxt], 1)
+        logits, cache = dec(params, cache, nxt)
+    full = model._forward_train(params, {"tokens": seq, **(batch_extra or {})})
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1], np.float32),
+        np.asarray(full[:, -1], np.float32), atol=atol, rtol=atol)
+
+
+def test_decode_matches_forward_dense():
+    _decode_matches_forward(ModelConfig(
+        name="d", family="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=97, qkv_bias=True))
+
+
+def test_decode_matches_forward_griffin():
+    _decode_matches_forward(ModelConfig(
+        name="g", family="hybrid", n_layers=5, d_model=64, n_heads=4,
+        n_kv_heads=1, d_ff=128, vocab=91, window=8,
+        block_pattern=("rec", "rec", "attn"), pattern_tail=("rec", "rec"),
+        rnn_state_dim=64))
+
+
+def test_decode_matches_forward_encdec():
+    src = jax.random.normal(jax.random.key(5), (2, 8, 64))
+    _decode_matches_forward(ModelConfig(
+        name="e", family="audio", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=83, norm="layer",
+        enc_layers=2, dec_layers=2), batch_extra={"src_frames": src})
+
+
+def test_prefill_matches_stepwise_xlstm():
+    cfg = ModelConfig(name="x", family="ssm", n_layers=4, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab=77,
+                      slstm_period=2)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, 77)
+    lp, st1 = jax.jit(model.prefill)(params, model.make_caches(B, 0),
+                                     {"tokens": tokens})
+    st2 = model.make_caches(B, 0)
+    dec = jax.jit(model.decode_step)
+    for t in range(S):
+        ld, st2 = dec(params, st2, tokens[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(lp, np.float32),
+                               np.asarray(ld, np.float32), atol=6e-2,
+                               rtol=6e-2)
+    np.testing.assert_allclose(np.asarray(st1.m_C), np.asarray(st2.m_C),
+                               atol=6e-2, rtol=6e-2)
+
+
+def test_remat_policies_same_loss():
+    """Remat changes memory, never math."""
+    import dataclasses
+
+    base = get_arch("tinyllama-1.1b").smoke
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 32), 0,
+                                          base.vocab),
+             "labels": jax.random.randint(jax.random.key(2), (2, 32), 0,
+                                          base.vocab)}
+    losses = []
+    for pol in ("none", "full", "dots"):
+        cfg = dataclasses.replace(base, remat_policy=pol)
+        m = build_model(cfg)
+        p, _ = m.init(jax.random.key(0))
+        l, g = jax.jit(jax.value_and_grad(m.loss))(p, batch)
+        losses.append(float(l))
+    assert max(losses) - min(losses) < 1e-3, losses
