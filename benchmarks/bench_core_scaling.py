@@ -1,29 +1,73 @@
-"""Scheduler-throughput benchmark: Algorithm 1 wall time vs problem size
-(assignment flows/sec and end-to-end schedule time), plus the Pallas
-assignment kernel in interpret mode for reference."""
+"""Scheduler-throughput benchmark: batched vectorized engine vs the legacy
+per-core Python event loop on the paper's trace workloads, plus sweep
+throughput of ``run_batch`` over the full algorithm grid.
+
+The engine must stay exactly faithful: every engine schedule in this
+benchmark is asserted equal (per-coflow CCTs) to the legacy oracle's.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core import run, sample_instance, synth_fb_trace
+from repro.core import (
+    ALGORITHMS,
+    run,
+    run_batch,
+    run_fast,
+    sample_instance,
+    synth_fb_trace,
+)
+
+GRID = [(16, 50), (16, 100), (32, 100), (32, 200), (64, 200)]
 
 
-def main() -> list:
+def main(grid=GRID, compare_legacy=True, workers=None) -> list:
     trace = synth_fb_trace(526, seed=2026)
     rows = []
-    print("== Scheduler throughput (control-plane) ==")
-    print(f"{'N':>4s} {'M':>5s} {'flows':>7s} {'assign+sched s':>15s} {'flows/s':>9s}")
-    for N, M in [(16, 50), (16, 100), (32, 100), (32, 200), (64, 200)]:
+    instances = []
+    print("== Scheduler throughput (control-plane): engine vs legacy ==")
+    hdr = f"{'N':>4s} {'M':>5s} {'flows':>7s} {'engine s':>9s} {'flows/s':>9s}"
+    if compare_legacy:
+        hdr += f" {'legacy s':>9s} {'speedup':>8s}"
+    print(hdr)
+    tot_engine = tot_legacy = 0.0
+    for N, M in grid:
         inst = sample_instance(trace, N=N, M=M, rates=[10, 20, 30], delta=8.0,
                                seed=0)
+        instances.append(inst)
         n_flows = sum(c.num_flows for c in inst.coflows)
-        t0 = time.time()
-        s = run(inst, "ours")
-        dt = time.time() - t0
-        rows.append({"N": N, "M": M, "flows": n_flows, "seconds": dt})
-        print(f"{N:4d} {M:5d} {n_flows:7d} {dt:15.3f} {n_flows/dt:9.0f}")
+        t0 = time.perf_counter()
+        s_fast = run_fast(inst, "ours")
+        dt_engine = time.perf_counter() - t0
+        tot_engine += dt_engine
+        row = {"N": N, "M": M, "flows": n_flows, "engine_s": dt_engine}
+        line = f"{N:4d} {M:5d} {n_flows:7d} {dt_engine:9.3f} {n_flows/dt_engine:9.0f}"
+        if compare_legacy:
+            t0 = time.perf_counter()
+            s_legacy = run(inst, "ours")
+            dt_legacy = time.perf_counter() - t0
+            tot_legacy += dt_legacy
+            assert np.allclose(s_fast.ccts, s_legacy.ccts, atol=1e-6), \
+                f"engine/oracle divergence at N={N}, M={M}"
+            row.update(legacy_s=dt_legacy, speedup=dt_legacy / dt_engine)
+            line += f" {dt_legacy:9.3f} {dt_legacy/dt_engine:7.1f}x"
+        rows.append(row)
+        print(line)
+    if compare_legacy and tot_engine > 0:
+        print(f"total: engine {tot_engine:.2f}s vs legacy {tot_legacy:.2f}s "
+              f"-> {tot_legacy/tot_engine:.1f}x")
+
+    # Sweep throughput: the whole grid x all 5 algorithms in one run_batch
+    # call (validator-gated), parallel across workers.
+    t0 = time.perf_counter()
+    tab = run_batch(instances, ALGORITHMS, seeds=(0,), check="validate",
+                    workers=workers)
+    dt = time.perf_counter() - t0
+    n_flows_total = sum(r.n_flows for r in tab)
+    print(f"run_batch sweep: {len(tab)} runs ({n_flows_total} flows scheduled) "
+          f"in {dt:.2f}s")
     return rows
 
 

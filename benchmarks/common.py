@@ -1,22 +1,24 @@
-"""Shared benchmark harness: one paper setting -> normalized metrics table."""
+"""Shared benchmark harness: one paper setting -> normalized metrics table.
+
+All settings run through the batched sweep engine (``repro.core.run_batch``),
+so a whole (instances x algorithms) grid is scheduled by the vectorized
+engine — optionally across worker processes — and every schedule passes the
+independent feasibility validator before its metrics are aggregated.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
-    ALGORITHMS,
-    run,
-    sample_instance,
-    synth_fb_trace,
-    tail_cct,
-    validate,
-)
+from repro.core import ALGORITHMS, run_batch, sample_instance, synth_fb_trace
 
 # Paper §V-A rate vectors
 IMBALANCED = {3: [10, 20, 30], 4: [5, 10, 20, 25], 5: [5, 5, 10, 15, 25]}
 BALANCED = {3: [20, 20, 20], 4: [15, 15, 15, 15], 5: [12, 12, 12, 12, 12]}
 
 _TRACE = None
+
+#: Process count for run_batch; ``benchmarks.run --workers N`` overrides.
+DEFAULT_WORKERS: int | None = None
 
 
 def trace():
@@ -28,23 +30,34 @@ def trace():
 
 def run_setting(*, N=16, M=100, rates=(10, 20, 30), delta=8.0, seeds=(0, 1, 2),
                 weight_mode="uniform-int", algorithms=ALGORITHMS,
-                scheduling="work-conserving") -> dict:
-    """Mean normalized weighted CCT (+ tails) over seeds, normalized to OURS."""
+                scheduling="work-conserving", check="validate",
+                workers=None) -> dict:
+    """Mean normalized weighted CCT (+ tails) over seeds, normalized to OURS.
+
+    One ``run_batch`` call covers the whole (seed x algorithm) grid; the
+    sampling seed doubles as the rand-assign seed (``pair_seeds``), matching
+    the paper's protocol.
+    """
+    algorithms = tuple(algorithms)
+    insts = [
+        sample_instance(trace(), N=N, M=M, rates=list(rates), delta=delta,
+                        seed=seed, weight_mode=weight_mode)
+        for seed in seeds
+    ]
+    tab = run_batch(
+        insts, algorithms, seeds=tuple(seeds), pair_seeds=True,
+        schedulings=(scheduling,), check=check,
+        workers=DEFAULT_WORKERS if workers is None else workers,
+    )
+    base_alg = "ours" if "ours" in algorithms else algorithms[0]
     agg = {alg: {"w": [], "p95": [], "p99": []} for alg in algorithms}
-    for seed in seeds:
-        inst = sample_instance(trace(), N=N, M=M, rates=list(rates),
-                               delta=delta, seed=seed, weight_mode=weight_mode)
-        base = None
+    for i, _seed in enumerate(seeds):
+        base = tab.filter(instance=i, algorithm=base_alg).rows[0]
         for alg in algorithms:
-            s = run(inst, alg, seed=seed, scheduling=scheduling) \
-                if alg in ("ours", "rho-assign", "rand-assign") else \
-                run(inst, alg, seed=seed)
-            validate(s)
-            if alg == "ours":
-                base = (s.total_weighted_cct, tail_cct(s, 0.95), tail_cct(s, 0.99))
-            agg[alg]["w"].append(s.total_weighted_cct / base[0])
-            agg[alg]["p95"].append(tail_cct(s, 0.95) / base[1])
-            agg[alg]["p99"].append(tail_cct(s, 0.99) / base[2])
+            r = tab.filter(instance=i, algorithm=alg).rows[0]
+            agg[alg]["w"].append(r.weighted_cct / base.weighted_cct)
+            agg[alg]["p95"].append(r.p95 / base.p95)
+            agg[alg]["p99"].append(r.p99 / base.p99)
     return {alg: {k: float(np.mean(v)) for k, v in d.items()}
             for alg, d in agg.items()}
 

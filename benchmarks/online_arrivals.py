@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import run, sample_instance, synth_fb_trace, validate
+from repro.core import run_fast, sample_instance, synth_fb_trace, validate
 from repro.core.online import OnlineInstance, run_online
 
 
@@ -22,7 +22,7 @@ def main(compressions=(0.0, 0.5, 1.0, 2.0), seeds=(0, 1)):
         for seed in seeds:
             inst = sample_instance(trace, N=16, M=60, rates=[10, 20, 30],
                                    delta=8.0, seed=seed)
-            off = run(inst, "ours")
+            off = run_fast(inst, "ours")
             validate(off)
             span = off.ccts.max() * comp
             rng = np.random.default_rng(seed)

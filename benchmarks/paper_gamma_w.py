@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import gamma_w, run, sample_instance, synth_fb_trace, validate
+from repro.core import gamma_w, run_fast, sample_instance, synth_fb_trace, validate
 from repro.core.lower_bounds import global_lb
 
 
@@ -27,7 +27,7 @@ def main(ms=(25, 50, 100, 200), sigma_ratios=(0.1, 0.5, 1.0), seeds=(0, 1)):
                 inst = sample_instance(
                     trace, N=16, M=M, rates=[10, 20, 30], delta=8.0,
                     seed=seed, weight_mode="normal", weight_params=(10.0, 10.0 * sr))
-                s = run(inst, "ours")
+                s = run_fast(inst, "ours")
                 validate(s)
                 w = inst.weights
                 lbs = np.array([global_lb(c.demand, inst.R, inst.delta)

@@ -18,12 +18,16 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip-comm", action="store_true",
                     help="skip the 512-device comm-planner compile")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="run_batch worker processes for the paper sweeps "
+                         "(default: auto; 0 = in-process serial)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
     from benchmarks import (
         bench_core_scaling,
         comm_planner,
+        common,
         online_arrivals,
         paper_delta_sensitivity,
         paper_fig4_ablation,
@@ -32,6 +36,8 @@ def main(argv=None) -> int:
         paper_n_scaling,
         roofline_report,
     )
+
+    common.DEFAULT_WORKERS = args.workers
 
     print("#" * 72)
     paper_fig4_ablation.main(seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2))
@@ -51,7 +57,7 @@ def main(argv=None) -> int:
     print("#" * 72)
     online_arrivals.main(seeds=(0, 1) if args.full else (0,))
     print("#" * 72)
-    bench_core_scaling.main()
+    bench_core_scaling.main(workers=args.workers)
     print("#" * 72)
     roofline_report.main()
     if not args.skip_comm:

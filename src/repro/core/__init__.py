@@ -3,6 +3,14 @@ networks under the not-all-stop reconfiguration model (Algorithm 1), with its
 lower bounds, ablation baselines, feasibility validator, theory certificates,
 and trace-driven workload generation.
 """
+from .batch import ResultTable, SweepRow, run_batch  # noqa: F401
+from .engine import (  # noqa: F401
+    SCHEDULINGS,
+    FlowTable,
+    cross_check,
+    run_fast,
+    schedule_all_cores,
+)
 from .assignment import (  # noqa: F401
     AssignedFlow,
     Assignment,

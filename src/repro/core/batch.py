@@ -1,0 +1,205 @@
+"""Batched multi-instance sweep API over the vectorized scheduling engine.
+
+``run_batch`` maps a whole parameter grid — instances x algorithms x
+scheduling policies (x seeds) — to per-run ``Schedule`` metrics, optionally
+fanning out across processes. Every run is gated by the differential-testing
+harness: ``check="validate"`` (default) passes each schedule through the
+independent feasibility validator, ``check="oracle"`` additionally replays
+the legacy per-core scheduler and asserts exact agreement, so a sweep can
+never silently drift from the reference algorithm.
+
+The result is a flat, structured table (``ResultTable``) that the benchmark
+scripts (``benchmarks/common.run_setting``, ``bench_core_scaling``,
+``paper_*``) consume instead of hand-rolled dict aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .coflow import Instance
+from .scheduler import ALGORITHMS, Schedule, tail_cct
+
+__all__ = ["SweepRow", "ResultTable", "run_batch"]
+
+_SUNFLOW_ALGS = ("sunflow-core", "rand-sunflow")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRow:
+    """Metrics of one (instance, algorithm, scheduling, seed) grid point."""
+
+    instance: int          # index into the `instances` argument
+    algorithm: str
+    scheduling: str        # "sunflow" for the sunflow baselines
+    seed: int
+    weighted_cct: float
+    total_cct: float
+    p95: float
+    p99: float
+    makespan: float
+    n_flows: int
+    wall_s: float          # engine wall-clock for this run (excl. checks)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ResultTable:
+    """A list of ``SweepRow``s with pandas-free slicing helpers."""
+
+    def __init__(self, rows: Sequence[SweepRow]):
+        self.rows = list(rows)
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def filter(self, **where) -> "ResultTable":
+        """Rows matching all given column=value constraints."""
+        out = [
+            r for r in self.rows
+            if all(getattr(r, k) == v for k, v in where.items())
+        ]
+        return ResultTable(out)
+
+    def column(self, name: str, **where) -> np.ndarray:
+        return np.array([getattr(r, name) for r in self.filter(**where).rows])
+
+    def mean(self, name: str, **where) -> float:
+        return float(self.column(name, **where).mean())
+
+    def to_dicts(self) -> list[dict]:
+        return [r.as_dict() for r in self.rows]
+
+    def __repr__(self) -> str:
+        return f"ResultTable({len(self.rows)} rows)"
+
+
+def _start_method() -> str:
+    """Pick a multiprocessing start method for the sweep workers.
+
+    fork is cheapest and works from any parent (including stdin/REPL "main"
+    modules spawn can't re-import), but forking a process whose JAX runtime
+    is live risks deadlocking on XLA's internal threads — so once jax is
+    imported, prefer spawn whenever the main module is re-importable.
+    Workers themselves only run numpy code either way.
+    """
+    import multiprocessing as mp
+    import sys
+
+    methods = mp.get_all_start_methods()
+    if "fork" not in methods:
+        return "spawn"
+    if "jax" in sys.modules:
+        main = sys.modules.get("__main__")
+        main_file = getattr(main, "__file__", None)
+        if getattr(main, "__spec__", None) is not None or (
+                main_file and os.path.exists(main_file)):
+            return "spawn"
+    return "fork"
+
+
+def _run_one(payload) -> SweepRow:
+    """Worker body: one grid point -> SweepRow. Must stay picklable."""
+    (idx, inst, alg, sched, seed, check) = payload
+    from .engine import cross_check, run_fast
+
+    t0 = time.perf_counter()
+    s = run_fast(inst, alg, seed=seed, scheduling=sched)
+    wall = time.perf_counter() - t0
+    if check == "oracle":
+        cross_check(inst, alg, seed=seed, scheduling=sched, fast=s)
+    elif check == "validate":
+        from .simulator import validate
+        validate(s)
+    return _row_from_schedule(idx, alg, sched, seed, s, wall)
+
+
+def _row_from_schedule(idx: int, alg: str, sched: str, seed: int,
+                       s: Schedule, wall: float) -> SweepRow:
+    return SweepRow(
+        instance=idx,
+        algorithm=alg,
+        scheduling=sched,
+        seed=seed,
+        weighted_cct=s.total_weighted_cct,
+        total_cct=s.total_cct,
+        p95=tail_cct(s, 0.95),
+        p99=tail_cct(s, 0.99),
+        makespan=float(s.ccts.max()) if s.ccts.size else 0.0,
+        n_flows=len(s.flows),
+        wall_s=wall,
+    )
+
+
+def run_batch(
+    instances: Sequence[Instance],
+    algorithms: Iterable[str] = ALGORITHMS,
+    *,
+    seeds: Sequence[int] = (0,),
+    schedulings: Iterable[str] = ("work-conserving",),
+    pair_seeds: bool = False,
+    check: str = "validate",
+    workers: int | None = None,
+) -> ResultTable:
+    """Run a whole sweep grid through the batched engine.
+
+    ``instances x algorithms x schedulings x seeds`` is the full grid;
+    with ``pair_seeds=True``, ``seeds`` must align with ``instances`` and
+    seed ``seeds[i]`` is used only for instance ``i`` (the benchmark
+    convention, where the instance-sampling seed doubles as the rand-assign
+    seed). The sunflow baselines ignore ``schedulings`` — they always use
+    their own coflow-at-a-time policy and are run once per (instance, seed)
+    with scheduling recorded as ``"sunflow"``.
+
+    ``check``: "validate" (default) runs the independent feasibility
+    validator on every schedule; "oracle" additionally cross-checks against
+    the legacy per-core scheduler (exact agreement); "none" skips both.
+
+    ``workers``: 0 or 1 for in-process serial execution; ``None`` picks a
+    sensible default (serial for small grids, one process per CPU otherwise).
+    Rows come back in deterministic grid order regardless of worker count.
+    """
+    algorithms = tuple(algorithms)
+    schedulings = tuple(schedulings)
+    seeds = tuple(seeds)
+    unknown = set(algorithms) - set(ALGORITHMS)
+    if unknown:
+        raise ValueError(f"unknown algorithms {sorted(unknown)}")
+    if check not in ("none", "validate", "oracle"):
+        raise ValueError(f"unknown check {check!r}")
+    if pair_seeds and len(seeds) != len(instances):
+        raise ValueError(
+            f"pair_seeds=True needs len(seeds) == len(instances), "
+            f"got {len(seeds)} vs {len(instances)}")
+
+    grid = []
+    for idx, inst in enumerate(instances):
+        inst_seeds = (seeds[idx],) if pair_seeds else seeds
+        for seed in inst_seeds:
+            for alg in algorithms:
+                if alg in _SUNFLOW_ALGS:
+                    grid.append((idx, inst, alg, "sunflow", seed, check))
+                else:
+                    for sched in schedulings:
+                        grid.append((idx, inst, alg, sched, seed, check))
+
+    if workers is None:
+        workers = 0 if len(grid) < 4 else min(os.cpu_count() or 1, len(grid), 16)
+    if workers and workers > 1 and len(grid) > 1:
+        import concurrent.futures as cf
+        import multiprocessing as mp
+
+        ctx = mp.get_context(_start_method())
+        with cf.ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
+            rows = list(ex.map(_run_one, grid, chunksize=max(1, len(grid) // (4 * workers))))
+    else:
+        rows = [_run_one(p) for p in grid]
+    return ResultTable(rows)

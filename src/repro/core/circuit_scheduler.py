@@ -10,6 +10,13 @@ established immediately (occupying both ports for ``delta + size/rate``).
 behaviour (SUNFLOW-CORE baseline): coflows are served strictly sequentially on
 the core — no cross-coflow work conservation — with intra-coflow largest-first
 list scheduling, matching Sunflow's non-preemptive single-coflow scheduler.
+(Note it inherits ``_run_list_scheduler``'s default ``guard=True``, i.e. the
+priority-guarded scan, for the intra-coflow phase.)
+
+These per-core event loops are the *reference oracle* for the vectorized
+batched engine (``repro.core.engine``), which must reproduce their output
+bit-for-bit; see tests/test_engine_differential.py. Keep semantic changes
+here in lockstep with the engine.
 """
 from __future__ import annotations
 

@@ -1,0 +1,411 @@
+"""Vectorized batched scheduling engine (fast path for Algorithm 1's phase 3).
+
+``circuit_scheduler._run_list_scheduler`` is an event loop that rescans every
+pending flow in a Python ``for`` at every event — O(events x pending) Python
+iterations, ~18 s for a single N=32, M=200 trace instance. This module
+replaces that inner scan with numpy mask arithmetic and schedules *all K
+cores in one call* by mapping each (core, port) pair to a distinct resource
+id, so one merged event loop drives the whole machine:
+
+  - port availability lives in two flat ``(K*N,)`` float arrays (ingress and
+    egress resources are independent, as in the paper's OCS model);
+  - per event, the set of flows that the sequential priority scan would start
+    is computed with vector masks: a flow starts iff it is the first pending
+    candidate on *both* its resources (iterated to a fixed point for the
+    work-conserving policy — the classic locally-first parallelisation of
+    greedy list scheduling, which provably reproduces the sequential scan);
+  - only cores with a completion at the current event time are touched, so
+    the merged loop keeps the legacy per-core work complexity.
+
+The legacy per-core schedulers are kept untouched as the *reference oracle*:
+``cross_check`` runs both paths and asserts bit-level agreement, and the
+differential-testing harness (tests/test_engine_differential.py) drives
+randomized instances through it for every algorithm x scheduling policy.
+All completion times are computed with the exact float associativity of the
+legacy code (``(t + delta) + size/rate``) so agreement is exact, not just
+within tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .assignment import Assignment, assign_random, assign_rho_only, assign_tau_aware
+from .circuit_scheduler import ScheduledFlow
+from .coflow import Instance
+from .ordering import order_coflows
+from .scheduler import Schedule
+
+__all__ = ["FlowTable", "SCHEDULINGS", "schedule_all_cores", "run_fast", "cross_check"]
+
+#: Intra-core policies understood by the engine. ``sunflow`` is the
+#: coflow-at-a-time policy used by the SUNFLOW-CORE baselines; the other
+#: three mirror ``scheduler.run``'s ``scheduling`` argument.
+SCHEDULINGS = ("work-conserving", "priority-guard", "reserving", "sunflow")
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowTable:
+    """All assigned flows of an instance as flat arrays, in global pi order."""
+
+    pos: np.ndarray   # (F,) int64 — coflow position in pi
+    cid: np.ndarray   # (F,) int64 — original coflow id
+    fi: np.ndarray    # (F,) int64 — ingress port
+    fj: np.ndarray    # (F,) int64 — egress port
+    core: np.ndarray  # (F,) int64 — assigned core
+    size: np.ndarray  # (F,) float64
+
+    @classmethod
+    def from_assignment(cls, assignment: Assignment) -> "FlowTable":
+        pos, cid, fi, fj, core, size = [], [], [], [], [], []
+        for per_coflow in assignment.flows:
+            for af in per_coflow:
+                pos.append(af.flow.coflow)
+                cid.append(af.flow.cid)
+                fi.append(af.flow.i)
+                fj.append(af.flow.j)
+                core.append(af.core)
+                size.append(af.flow.size)
+        return cls(
+            pos=np.asarray(pos, dtype=np.int64),
+            cid=np.asarray(cid, dtype=np.int64),
+            fi=np.asarray(fi, dtype=np.int64),
+            fj=np.asarray(fj, dtype=np.int64),
+            core=np.asarray(core, dtype=np.int64),
+            size=np.asarray(size, dtype=np.float64),
+        )
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.pos.size)
+
+
+def _first_occurrence(vals: np.ndarray, scratch: np.ndarray) -> np.ndarray:
+    """Boolean mask marking the first occurrence of each value, in order.
+
+    Sort-free: writing positions in reverse leaves each slot of ``scratch``
+    holding the *first* position of its value, so a flow is first on its
+    resource iff the scratch entry points back at it. ``scratch`` is an
+    int64 array of at least ``vals.max() + 1`` entries (contents don't
+    matter; only slots touched by ``vals`` are read back).
+    """
+    n = vals.size
+    scratch[vals[::-1]] = np.arange(n - 1, -1, -1)
+    return scratch[vals] == np.arange(n)
+
+
+def _by_resource(res_ids: np.ndarray, n_res: int) -> list[np.ndarray]:
+    """Flow indices using each resource, in priority (index) order."""
+    order = np.argsort(res_ids, kind="stable")
+    counts = np.bincount(res_ids, minlength=n_res)
+    return np.split(order, np.cumsum(counts)[:-1])
+
+
+def _pop_next_event(events: list, t: float) -> float:
+    """Earliest completion strictly after t (events is a heapified list)."""
+    while events and events[0] <= t:
+        heapq.heappop(events)
+    if not events:
+        raise RuntimeError("scheduler deadlock: pending flows but no events")
+    return heapq.heappop(events)
+
+
+def _event_loop(
+    rin: np.ndarray,       # (F,) int64 ingress resource ids (core*N + i)
+    rout: np.ndarray,      # (F,) int64 egress resource ids (core*N + j)
+    srv: np.ndarray,       # (F,) float64 service times size/rate[core]
+    core: np.ndarray,      # (F,) int64
+    delta: float,
+    n_res: int,
+    n_ports: int,
+    t0: float = 0.0,
+    guard: bool = False,
+) -> np.ndarray:
+    """Vectorized merged event loop; flows are in priority order per core.
+
+    Returns t_establish per flow. Exactly reproduces the legacy sequential
+    scan: at each event, the started set is {flows whose two resources are
+    free and which are the first pending user of both} — iterated to a fixed
+    point for guard=False, single-pass for guard=True (where a pending
+    higher-priority flow makes both its resources unavailable whether or not
+    it starts, so "first on both" is already the full answer).
+
+    Work-conserving fast path: after each event's fixed point, every pending
+    flow has at least one busy resource (else it would have started), so a
+    flow can only become startable at an event where one of its resources
+    completes *exactly then*. Candidates are therefore gathered from the
+    per-resource flow lists of just-freed resources instead of rescanning
+    the whole pending set — per-event cost scales with port occupancy, not
+    with total remaining flows.
+    """
+    F = rin.size
+    t_est = np.full(F, -1.0)
+    if F == 0:
+        return t_est
+    free_in = np.full(n_res, t0)
+    free_out = np.full(n_res, t0)
+    done = np.zeros(F, dtype=bool)
+    scratch = np.empty(n_res, dtype=np.int64)
+    events: list = []  # heap of future completion times
+    remaining = F
+    t = t0
+
+    if guard:
+        pending = np.arange(F)
+        first_event = True
+        while remaining:
+            if first_event:
+                pend = pending
+                first_event = False
+            else:
+                # Only cores with a completion at t can start flows now.
+                act = np.zeros(n_res // n_ports, dtype=bool)
+                act[np.nonzero(free_in == t)[0] // n_ports] = True
+                act[np.nonzero(free_out == t)[0] // n_ports] = True
+                pend = pending[act[core[pending]]]
+            if pend.size:
+                ri, rj = rin[pend], rout[pend]
+                feas = (
+                    (free_in[ri] <= t) & (free_out[rj] <= t)
+                    & _first_occurrence(ri, scratch) & _first_occurrence(rj, scratch)
+                )
+                start = pend[feas]
+                if start.size:
+                    tc = (t + delta) + srv[start]
+                    free_in[rin[start]] = tc
+                    free_out[rout[start]] = tc
+                    t_est[start] = t
+                    done[start] = True
+                    remaining -= start.size
+                    for v in tc.tolist():
+                        heapq.heappush(events, v)
+                    pending = pending[~done[pending]]
+                    if not remaining:
+                        break
+            t = _pop_next_event(events, t)
+        return t_est
+
+    in_lists = _by_resource(rin, n_res)
+    out_lists = _by_resource(rout, n_res)
+    cand = np.arange(F)  # at t0 every flow is a candidate
+    while remaining:
+        cand = cand[(free_in[rin[cand]] <= t) & (free_out[rout[cand]] <= t)]
+        while cand.size:
+            safe = _first_occurrence(rin[cand], scratch) \
+                & _first_occurrence(rout[cand], scratch)
+            start = cand[safe]
+            tc = (t + delta) + srv[start]
+            free_in[rin[start]] = tc
+            free_out[rout[start]] = tc
+            t_est[start] = t
+            done[start] = True
+            remaining -= start.size
+            for v in tc.tolist():
+                heapq.heappush(events, v)
+            cand = cand[~safe]
+            cand = cand[(free_in[rin[cand]] <= t) & (free_out[rout[cand]] <= t)]
+        if not remaining:
+            break
+        t = _pop_next_event(events, t)
+        # Gather candidates from the flow lists of resources freed exactly
+        # at t (see the invariant in the docstring).
+        pool = [in_lists[r] for r in np.nonzero(free_in == t)[0]]
+        pool += [out_lists[r] for r in np.nonzero(free_out == t)[0]]
+        cand = np.unique(np.concatenate(pool)) if pool else np.empty(0, np.int64)
+        cand = cand[~done[cand]]
+    return t_est
+
+
+def _reserving_times(
+    rin: np.ndarray, rout: np.ndarray, srv: np.ndarray, delta: float, n_res: int
+) -> np.ndarray:
+    """Strict in-order reservation (no backfill) over merged resources."""
+    avail_in = np.zeros(n_res)
+    avail_out = np.zeros(n_res)
+    t_est = np.empty(rin.size)
+    for f in range(rin.size):
+        i, j = rin[f], rout[f]
+        t = avail_in[i] if avail_in[i] >= avail_out[j] else avail_out[j]
+        tc = t + delta + srv[f]
+        avail_in[i] = tc
+        avail_out[j] = tc
+        t_est[f] = t
+    return t_est
+
+
+def _sunflow_times(
+    table: FlowTable,
+    rin: np.ndarray,
+    rout: np.ndarray,
+    srv: np.ndarray,
+    delta: float,
+    n_ports: int,
+    K: int,
+) -> np.ndarray:
+    """SUNFLOW-CORE: per core, coflows strictly sequential (barrier), flows of
+    one coflow scheduled largest-first.
+
+    Note: the legacy ``schedule_core_sunflow`` leaves ``_run_list_scheduler``'s
+    ``guard`` at its default ``True``, so the intra-coflow scan is the
+    priority-guarded variant — reproduced here with ``guard=True``."""
+    t_est = np.full(table.n_flows, -1.0)
+    idx = np.arange(table.n_flows)
+    for k in range(K):
+        on_k = idx[table.core == k]
+        barrier = 0.0
+        # groups in pi order; intra-group largest-first with (i, j) tie-break,
+        # matching circuit_scheduler.schedule_core_sunflow exactly.
+        for pos in np.unique(table.pos[on_k]):
+            grp = on_k[table.pos[on_k] == pos]
+            order = np.lexsort((table.fj[grp], table.fi[grp], -table.size[grp]))
+            grp = grp[order]
+            te = _event_loop(
+                rin[grp], rout[grp], srv[grp], table.core[grp], delta,
+                n_res=K * n_ports, n_ports=n_ports, t0=barrier, guard=True,
+            )
+            t_est[grp] = te
+            barrier = max(barrier, float(((te + delta) + srv[grp]).max()))
+    return t_est
+
+
+def schedule_all_cores(
+    inst: Instance,
+    pi: np.ndarray,
+    assignment: Assignment,
+    scheduling: str = "work-conserving",
+) -> Schedule:
+    """Schedule every assigned flow on all K cores in one vectorized call.
+
+    Drop-in replacement for ``scheduler._schedule_from_assignment``; produces
+    identical ``Schedule`` contents (flows in core-major priority order, same
+    establishment times bit-for-bit).
+    """
+    table = FlowTable.from_assignment(assignment)
+    K, N = inst.K, inst.N
+    rin = table.core * N + table.fi
+    rout = table.core * N + table.fj
+    srv = table.size / inst.rates[table.core]
+    if scheduling == "work-conserving":
+        t_est = _event_loop(rin, rout, srv, table.core, inst.delta, K * N, N)
+    elif scheduling == "priority-guard":
+        t_est = _event_loop(rin, rout, srv, table.core, inst.delta, K * N, N,
+                            guard=True)
+    elif scheduling == "reserving":
+        t_est = _reserving_times(rin, rout, srv, inst.delta, K * N)
+    elif scheduling == "sunflow":
+        t_est = _sunflow_times(table, rin, rout, srv, inst.delta, N, K)
+    else:
+        raise ValueError(
+            f"unknown scheduling {scheduling!r}; one of {SCHEDULINGS}")
+
+    # Materialize ScheduledFlow records in the legacy order: core-major,
+    # priority order within each core (schedule_core_sunflow emits coflow
+    # groups in pi order too, so core-major pi order matches it as well).
+    order = np.lexsort((np.arange(table.n_flows), table.core))
+    flows = []
+    for f in order:
+        te = float(t_est[f])
+        s = float(table.size[f])
+        rate = float(inst.rates[table.core[f]])
+        flows.append(
+            ScheduledFlow(
+                coflow=int(table.pos[f]),
+                cid=int(table.cid[f]),
+                i=int(table.fi[f]),
+                j=int(table.fj[f]),
+                core=int(table.core[f]),
+                size=s,
+                t_establish=te,
+                t_start=te + inst.delta,
+                t_complete=te + inst.delta + s / rate,
+            )
+        )
+    ccts = np.zeros(inst.M)
+    t_complete = (t_est + inst.delta) + srv
+    np.maximum.at(ccts, np.asarray(pi)[table.pos], t_complete)
+    return Schedule(inst=inst, pi=pi, assignment=assignment, flows=flows, ccts=ccts)
+
+
+def run_fast(
+    inst: Instance,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    scheduling: str = "work-conserving",
+) -> Schedule:
+    """Batched-engine counterpart of ``scheduler.run`` (same semantics).
+
+    Ordering and assignment are shared with the legacy path; only the
+    scheduling phase goes through the vectorized engine, so any disagreement
+    with ``scheduler.run`` isolates a scheduling-engine bug (which is what
+    ``cross_check`` and the differential test suite look for).
+    """
+    pi = order_coflows(inst)
+    if algorithm == "ours":
+        a = assign_tau_aware(inst, pi)
+    elif algorithm == "rho-assign":
+        a = assign_rho_only(inst, pi)
+    elif algorithm == "rand-assign":
+        a = assign_random(inst, pi, seed=seed)
+    elif algorithm == "sunflow-core":
+        a = assign_tau_aware(inst, pi)
+        scheduling = "sunflow"
+    elif algorithm == "rand-sunflow":
+        a = assign_random(inst, pi, seed=seed)
+        scheduling = "sunflow"
+    else:
+        from .scheduler import ALGORITHMS
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; one of {sorted(ALGORITHMS)}")
+    return schedule_all_cores(inst, pi, a, scheduling)
+
+
+def cross_check(
+    inst: Instance,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    scheduling: str = "work-conserving",
+    atol: float = 1e-6,
+    fast: Schedule | None = None,
+) -> Schedule:
+    """Differential gate: engine vs legacy oracle vs independent validator.
+
+    Runs the batched engine AND the legacy per-core path, asserts per-coflow
+    CCT agreement (within ``atol``; in practice bit-exact) and per-flow
+    establishment-time agreement, then passes the engine schedule through
+    ``simulator.validate``. Returns the engine schedule. Pass ``fast`` to
+    check an engine schedule already computed for the same arguments instead
+    of recomputing it.
+    """
+    from .scheduler import run as run_legacy
+    from .simulator import validate
+
+    if fast is None:
+        fast = run_fast(inst, algorithm, seed=seed, scheduling=scheduling)
+    if algorithm in ("sunflow-core", "rand-sunflow"):
+        # legacy `run` selects sunflow via the algorithm; its `scheduling`
+        # argument only applies to the list-scheduled algorithms.
+        legacy = run_legacy(inst, algorithm, seed=seed)
+    else:
+        legacy = run_legacy(inst, algorithm, seed=seed, scheduling=scheduling)
+    if not np.allclose(fast.ccts, legacy.ccts, atol=atol, rtol=0.0):
+        worst = int(np.argmax(np.abs(fast.ccts - legacy.ccts)))
+        raise AssertionError(
+            f"engine/oracle CCT mismatch ({algorithm}, {scheduling}): coflow "
+            f"{worst}: engine={fast.ccts[worst]!r} oracle={legacy.ccts[worst]!r}")
+    key = lambda f: (f.core, f.coflow, f.i, f.j, f.size)
+    fast_t = {key(f): f.t_establish for f in fast.flows}
+    legacy_t = {key(f): f.t_establish for f in legacy.flows}
+    if set(fast_t) != set(legacy_t):
+        raise AssertionError(
+            f"engine/oracle flow sets differ ({algorithm}, {scheduling})")
+    for kf, te in fast_t.items():
+        if abs(te - legacy_t[kf]) > atol:
+            raise AssertionError(
+                f"engine/oracle t_establish mismatch at {kf}: "
+                f"{te!r} vs {legacy_t[kf]!r}")
+    validate(fast)
+    return fast

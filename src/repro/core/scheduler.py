@@ -1,4 +1,14 @@
-"""Top-level multi-core coflow scheduling pipelines (OURS + the 4 baselines)."""
+"""Top-level multi-core coflow scheduling pipelines (OURS + the 4 baselines).
+
+This module is the *reference oracle*: a direct, per-core transcription of
+Algorithm 1 kept deliberately simple. The production path is
+``repro.core.engine`` (vectorized, all cores in one call) — it is validated
+against this module by ``engine.cross_check`` and the differential suite in
+tests/test_engine_differential.py, and ``repro.core.run_batch`` maps whole
+parameter grids over it. Prefer ``engine.run_fast``/``run_batch`` for
+anything performance-sensitive; prefer ``run`` here when a second,
+independent implementation is the point.
+"""
 from __future__ import annotations
 
 import dataclasses

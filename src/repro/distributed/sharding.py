@@ -25,7 +25,7 @@ from typing import Any
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import AbstractMesh, Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
 
@@ -33,10 +33,23 @@ __all__ = [
     "RuleSet",
     "TRAIN_RULES",
     "SERVE_RULES",
+    "abstract_mesh",
     "plan_sharding",
     "plan_tree",
     "batch_spec",
 ]
+
+
+def abstract_mesh(axis_sizes, axis_names) -> AbstractMesh:
+    """Construct an ``AbstractMesh`` across the JAX signature change.
+
+    Current JAX takes ``AbstractMesh(axis_sizes, axis_names)``; 0.4.x takes a
+    single ``shape_tuple`` of ``(name, size)`` pairs.
+    """
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 __all__ = ["coflow_assign_fwd"]
 
 BIG = jnp.float32(3.4e38)
@@ -140,7 +142,7 @@ def coflow_assign_fwd(
             pltpu.VMEM((k_cores, n_ports, n_ports), jnp.float32),  # nz
             pltpu.VMEM((k_cores, 1), jnp.float32),  # bound
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

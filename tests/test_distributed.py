@@ -109,6 +109,7 @@ def test_quantize_roundtrip_bound():
     assert err.max() <= float(jnp.max(jnp.abs(g))) / 127.0 + 1e-6
 
 
+@pytest.mark.slow
 def test_compressed_step_matches_plain():
     r = _run_sub("""
         from repro.models.api import ModelConfig, build_model
@@ -175,6 +176,7 @@ def test_watchdog_flags_stragglers():
     assert wd.stragglers and wd.stragglers[0][0] == 6
 
 
+@pytest.mark.slow
 def test_elastic_trainer_survives_device_loss(tmp_path):
     r = _run_sub(f"""
         from repro.distributed.fault import DeviceLoss, ElasticTrainer

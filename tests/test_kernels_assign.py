@@ -2,6 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Instance, assign_tau_aware, order_coflows, sample_instance, synth_fb_trace

@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -2,17 +2,18 @@
 AbstractMesh; no device allocation)."""
 import jax
 import numpy as np
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (
     SERVE_RULES,
     TRAIN_RULES,
+    abstract_mesh,
     batch_spec,
     plan_sharding,
 )
 
-MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-MESH_SINGLE = AbstractMesh((16, 16), ("data", "model"))
+MESH = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+MESH_SINGLE = abstract_mesh((16, 16), ("data", "model"))
 
 
 def spec(mesh, shape, axes, rules=TRAIN_RULES):
