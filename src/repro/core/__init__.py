@@ -8,9 +8,12 @@ from .engine import (  # noqa: F401
     SCHEDULINGS,
     FlowTable,
     cross_check,
+    cross_check_online,
     run_fast,
+    run_fast_online,
     schedule_all_cores,
 )
+from .online import OnlineInstance, run_online  # noqa: F401
 from .assignment import (  # noqa: F401
     AssignedFlow,
     Assignment,

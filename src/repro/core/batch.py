@@ -8,6 +8,12 @@ independent feasibility validator, ``check="oracle"`` additionally replays
 the legacy per-core scheduler and asserts exact agreement, so a sweep can
 never silently drift from the reference algorithm.
 
+Online grids get the SAME gating: an instance may be an ``OnlineInstance``
+(or a per-instance ``releases`` array may be passed), in which case the grid
+point runs ``engine.run_fast_online``, ``check="oracle"`` replays the
+``online.run_online`` reference oracle, and the validator additionally
+checks release respect.
+
 The result is a flat, structured table (``ResultTable``) that the benchmark
 scripts (``benchmarks/common.run_setting``, ``bench_core_scaling``,
 ``paper_*``) consume instead of hand-rolled dict aggregation.
@@ -21,7 +27,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from .coflow import Instance
+from .coflow import Instance, OnlineInstance
 from .scheduler import ALGORITHMS, Schedule, tail_cct
 
 __all__ = ["SweepRow", "ResultTable", "run_batch"]
@@ -108,17 +114,24 @@ def _start_method() -> str:
 
 def _run_one(payload) -> SweepRow:
     """Worker body: one grid point -> SweepRow. Must stay picklable."""
-    (idx, inst, alg, sched, seed, check) = payload
-    from .engine import cross_check, run_fast
+    (idx, inst, rel, alg, sched, seed, check) = payload
+    from .engine import cross_check, cross_check_online, run_fast, run_fast_online
 
     t0 = time.perf_counter()
-    s = run_fast(inst, alg, seed=seed, scheduling=sched)
+    if rel is None:
+        s = run_fast(inst, alg, seed=seed, scheduling=sched)
+    else:
+        oinst = OnlineInstance(inst=inst, releases=rel)
+        s = run_fast_online(oinst, alg, seed=seed, scheduling=sched)
     wall = time.perf_counter() - t0
     if check == "oracle":
-        cross_check(inst, alg, seed=seed, scheduling=sched, fast=s)
+        if rel is None:
+            cross_check(inst, alg, seed=seed, scheduling=sched, fast=s)
+        else:
+            cross_check_online(oinst, alg, seed=seed, scheduling=sched, fast=s)
     elif check == "validate":
         from .simulator import validate
-        validate(s)
+        validate(s, releases=rel)
     return _row_from_schedule(idx, alg, sched, seed, s, wall)
 
 
@@ -140,7 +153,7 @@ def _row_from_schedule(idx: int, alg: str, sched: str, seed: int,
 
 
 def run_batch(
-    instances: Sequence[Instance],
+    instances: Sequence[Instance | OnlineInstance],
     algorithms: Iterable[str] = ALGORITHMS,
     *,
     seeds: Sequence[int] = (0,),
@@ -148,6 +161,7 @@ def run_batch(
     pair_seeds: bool = False,
     check: str = "validate",
     workers: int | None = None,
+    releases: Sequence[np.ndarray | None] | None = None,
 ) -> ResultTable:
     """Run a whole sweep grid through the batched engine.
 
@@ -159,9 +173,17 @@ def run_batch(
     their own coflow-at-a-time policy and are run once per (instance, seed)
     with scheduling recorded as ``"sunflow"``.
 
+    Online grid points: an entry of ``instances`` may be an
+    ``OnlineInstance``, and/or ``releases`` may give a per-instance release
+    array (aligned with ``instances``; ``None`` entries stay offline, and a
+    non-``None`` entry overrides an ``OnlineInstance``'s own releases).
+    Those points run ``engine.run_fast_online`` with the same differential
+    gating as offline points (oracle = ``online.run_online``).
+
     ``check``: "validate" (default) runs the independent feasibility
-    validator on every schedule; "oracle" additionally cross-checks against
-    the legacy per-core scheduler (exact agreement); "none" skips both.
+    validator on every schedule (release-respecting for online points);
+    "oracle" additionally cross-checks against the legacy per-core scheduler
+    (exact agreement); "none" skips both.
 
     ``workers``: 0 or 1 for in-process serial execution; ``None`` picks a
     sensible default (serial for small grids, one process per CPU otherwise).
@@ -179,17 +201,26 @@ def run_batch(
         raise ValueError(
             f"pair_seeds=True needs len(seeds) == len(instances), "
             f"got {len(seeds)} vs {len(instances)}")
+    if releases is not None and len(releases) != len(instances):
+        raise ValueError(
+            f"releases must align with instances: "
+            f"got {len(releases)} vs {len(instances)}")
 
     grid = []
     for idx, inst in enumerate(instances):
+        rel = None
+        if isinstance(inst, OnlineInstance):
+            inst, rel = inst.inst, inst.releases
+        if releases is not None and releases[idx] is not None:
+            rel = np.asarray(releases[idx], dtype=np.float64)
         inst_seeds = (seeds[idx],) if pair_seeds else seeds
         for seed in inst_seeds:
             for alg in algorithms:
                 if alg in _SUNFLOW_ALGS:
-                    grid.append((idx, inst, alg, "sunflow", seed, check))
+                    grid.append((idx, inst, rel, alg, "sunflow", seed, check))
                 else:
                     for sched in schedulings:
-                        grid.append((idx, inst, alg, sched, seed, check))
+                        grid.append((idx, inst, rel, alg, sched, seed, check))
 
     if workers is None:
         workers = 0 if len(grid) < 4 else min(os.cpu_count() or 1, len(grid), 16)

@@ -10,8 +10,15 @@ established immediately (occupying both ports for ``delta + size/rate``).
 behaviour (SUNFLOW-CORE baseline): coflows are served strictly sequentially on
 the core — no cross-coflow work conservation — with intra-coflow largest-first
 list scheduling, matching Sunflow's non-preemptive single-coflow scheduler.
-(Note it inherits ``_run_list_scheduler``'s default ``guard=True``, i.e. the
+(It passes ``guard=True`` to ``_run_list_scheduler`` explicitly, i.e. the
 priority-guarded scan, for the intra-coflow phase.)
+
+Time comparisons follow ONE convention, shared with the online path: all
+comparisons are exact float comparisons — a port is free at event ``t`` iff
+``free <= t`` and a flow is released iff ``release <= t``. No epsilon is
+added on either side; the event heap carries the exact release/completion
+floats, so eligibility flips exactly at those events and the oracle stays
+bit-reproducible against the vectorized engine.
 
 These per-core event loops are the *reference oracle* for the vectorized
 batched engine (``repro.core.engine``), which must reproduce their output
@@ -55,6 +62,7 @@ def _run_list_scheduler(
     n_ports: int,
     t0: float = 0.0,
     guard: bool = True,
+    releases: np.ndarray | None = None,
 ) -> np.ndarray:
     """Core event loop. Flows are given in priority order; returns t_establish.
 
@@ -66,6 +74,14 @@ def _run_list_scheduler(
     a long low-priority flow can occupy a port a high-priority flow needs
     next, which is how the Lemma 3 bound gets violated in practice (see
     tests/test_theory.py::TestReproductionFindings).
+
+    ``releases`` (per flow, aligned with ``fi``) gates eligibility on arrival
+    times: a flow may establish only at events ``t >= releases[f]``. All
+    comparisons are exact (``release <= t``, ``free <= t`` — see the module
+    docstring); release times are seeded into the event heap so eligibility
+    flips exactly at the release instant. An unreleased flow is invisible to
+    the scheduler: under ``guard=True`` it does NOT protect its ports (the
+    online scheduler cannot know flows that have not arrived).
     """
     F = len(sizes)
     t_est = np.full(F, -1.0)
@@ -76,8 +92,10 @@ def _run_list_scheduler(
     done = np.zeros(F, dtype=bool)
     remaining = F
     events: list[float] = [t0]
+    if releases is not None:
+        events.extend(float(r) for r in np.unique(releases))
     heapq.heapify(events)
-    seen_times: set[float] = set()
+    seen_times: set[float] = set(events)
 
     while remaining:
         if not events:
@@ -90,6 +108,8 @@ def _run_list_scheduler(
         blocked_in = np.zeros(n_ports, dtype=bool)
         blocked_out = np.zeros(n_ports, dtype=bool)
         for f in pend:
+            if releases is not None and releases[f] > t:
+                continue  # not yet arrived: cannot start, cannot protect
             i, j = fi[f], fj[f]
             if (free_in[i] <= t and free_out[j] <= t
                     and not blocked_in[i] and not blocked_out[j]):
@@ -116,6 +136,7 @@ def schedule_core_list(
     delta: float,
     n_ports: int,
     guard: bool = False,
+    releases: np.ndarray | None = None,
 ) -> list[ScheduledFlow]:
     """The paper's work-conserving priority list scheduler for one core
     (Alg. 1 lines 23-31, literal: any flow whose two ports are idle starts).
@@ -124,11 +145,15 @@ def schedule_core_list(
     flows protect their port pairs). Reproduction finding: the guard HURTS —
     it creates cascading idle-while-blocked states (~2x worse weighted CCT on
     trace workloads) and still does not restore Lemma 3; see EXPERIMENTS.md.
+
+    ``releases`` (per flow, aligned with ``flows``) adds online release
+    gating — see ``_run_list_scheduler``.
     """
     fi = np.array([af.flow.i for af in flows], dtype=np.int64)
     fj = np.array([af.flow.j for af in flows], dtype=np.int64)
     sizes = np.array([af.flow.size for af in flows], dtype=np.float64)
-    t_est = _run_list_scheduler(fi, fj, sizes, rate, delta, n_ports, guard=guard)
+    t_est = _run_list_scheduler(fi, fj, sizes, rate, delta, n_ports, guard=guard,
+                                releases=releases)
     out = []
     for idx, af in enumerate(flows):
         te = float(t_est[idx])
@@ -154,6 +179,7 @@ def schedule_core_reserving(
     rate: float,
     delta: float,
     n_ports: int,
+    releases: np.ndarray | None = None,
 ) -> list[ScheduledFlow]:
     """Alternative reading of Alg. 1 lines 23-31: sequential reservation.
 
@@ -163,13 +189,19 @@ def schedule_core_reserving(
     EXPERIMENTS.md reproduction notes): neither this nor the work-conserving
     policy satisfies Lemma 3 on all adversarial instances, and the two differ
     measurably on trace workloads.
+
+    ``releases`` (per flow): online variant — flows are committed in the
+    given (arrival) order and each reservation additionally starts no
+    earlier than the flow's release time.
     """
     avail_in = np.zeros(n_ports)
     avail_out = np.zeros(n_ports)
     out = []
-    for af in flows:
+    for idx, af in enumerate(flows):
         i, j, d = af.flow.i, af.flow.j, af.flow.size
         t = float(max(avail_in[i], avail_out[j]))
+        if releases is not None and releases[idx] > t:
+            t = float(releases[idx])
         tc = t + delta + d / rate
         avail_in[i] = tc
         avail_out[j] = tc
@@ -210,7 +242,8 @@ def schedule_core_sunflow(
         fi = np.array([af.flow.i for af in grp], dtype=np.int64)
         fj = np.array([af.flow.j for af in grp], dtype=np.int64)
         sizes = np.array([af.flow.size for af in grp], dtype=np.float64)
-        t_est = _run_list_scheduler(fi, fj, sizes, rate, delta, n_ports, t0=barrier)
+        t_est = _run_list_scheduler(fi, fj, sizes, rate, delta, n_ports,
+                                    t0=barrier, guard=True)
         for idx, af in enumerate(grp):
             te = float(t_est[idx])
             tc = te + delta + af.flow.size / rate

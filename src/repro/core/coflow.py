@@ -16,6 +16,7 @@ import numpy as np
 __all__ = [
     "Coflow",
     "Instance",
+    "OnlineInstance",
     "Flow",
     "row_loads",
     "col_loads",
@@ -132,6 +133,29 @@ class Instance:
     def psi(self) -> int:
         """psi = max{K, tau_max} from Theorem 1."""
         return max(self.K, self.tau_max)
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineInstance:
+    """An :class:`Instance` plus per-coflow release (arrival) times.
+
+    ``releases[m]`` is the time coflow ``m`` (original id order) becomes
+    known; nothing of it may be assigned or scheduled earlier. The online
+    scheduling entry points are ``online.run_online`` (reference oracle) and
+    ``engine.run_fast_online`` (vectorized production path).
+    """
+
+    inst: Instance
+    releases: np.ndarray  # (M,) float64 >= 0
+
+    def __post_init__(self) -> None:
+        r = np.asarray(self.releases, dtype=np.float64)
+        if r.shape != (self.inst.M,):
+            raise ValueError(
+                f"releases must have shape ({self.inst.M},), got {r.shape}")
+        if (r < 0).any():
+            raise ValueError("release times must be >= 0")
+        object.__setattr__(self, "releases", r)
 
 
 def row_loads(D: np.ndarray) -> np.ndarray:

@@ -34,11 +34,19 @@ import numpy as np
 
 from .assignment import Assignment, assign_random, assign_rho_only, assign_tau_aware
 from .circuit_scheduler import ScheduledFlow
-from .coflow import Instance
-from .ordering import order_coflows
+from .coflow import Instance, OnlineInstance
+from .ordering import order_coflows, priority_scores
 from .scheduler import Schedule
 
-__all__ = ["FlowTable", "SCHEDULINGS", "schedule_all_cores", "run_fast", "cross_check"]
+__all__ = [
+    "FlowTable",
+    "SCHEDULINGS",
+    "schedule_all_cores",
+    "run_fast",
+    "run_fast_online",
+    "cross_check",
+    "cross_check_online",
+]
 
 #: Intra-core policies understood by the engine. ``sunflow`` is the
 #: coflow-at-a-time policy used by the SUNFLOW-CORE baselines; the other
@@ -122,6 +130,7 @@ def _event_loop(
     n_ports: int,
     t0: float = 0.0,
     guard: bool = False,
+    release: np.ndarray | None = None,
 ) -> np.ndarray:
     """Vectorized merged event loop; flows are in priority order per core.
 
@@ -139,6 +148,15 @@ def _event_loop(
     per-resource flow lists of just-freed resources instead of rescanning
     the whole pending set — per-event cost scales with port occupancy, not
     with total remaining flows.
+
+    ``release`` (per flow) adds online release gating: a flow is eligible
+    only at events ``t >= release[f]`` (exact float comparison, same
+    convention as ``circuit_scheduler``). Release times are seeded into the
+    event heap, extending the invariant above: a pending flow either has a
+    busy resource or an unreached release, so candidates at an event are
+    gathered from just-freed resources plus flows released exactly then. An
+    unreleased flow never protects its ports under ``guard=True`` (the
+    online scheduler cannot know flows that have not arrived).
     """
     F = rin.size
     t_est = np.full(F, -1.0)
@@ -148,9 +166,18 @@ def _event_loop(
     free_out = np.full(n_res, t0)
     done = np.zeros(F, dtype=bool)
     scratch = np.empty(n_res, dtype=np.int64)
-    events: list = []  # heap of future completion times
+    events: list = []  # heap of future completion (and release) times
     remaining = F
     t = t0
+    if release is not None:
+        rel_uniq, rel_inv = np.unique(release, return_inverse=True)
+        events = rel_uniq.tolist()
+        heapq.heapify(events)
+        # flow indices grouped by release value, in priority order
+        rel_lists = np.split(
+            np.argsort(rel_inv, kind="stable"),
+            np.cumsum(np.bincount(rel_inv))[:-1])
+        rel_map = {float(v): lst for v, lst in zip(rel_uniq, rel_lists)}
 
     if guard:
         pending = np.arange(F)
@@ -160,11 +187,16 @@ def _event_loop(
                 pend = pending
                 first_event = False
             else:
-                # Only cores with a completion at t can start flows now.
+                # Only cores with a completion (or a release) at t can
+                # start flows now.
                 act = np.zeros(n_res // n_ports, dtype=bool)
                 act[np.nonzero(free_in == t)[0] // n_ports] = True
                 act[np.nonzero(free_out == t)[0] // n_ports] = True
+                if release is not None:
+                    act[core[pending[release[pending] == t]]] = True
                 pend = pending[act[core[pending]]]
+            if release is not None and pend.size:
+                pend = pend[release[pend] <= t]
             if pend.size:
                 ri, rj = rin[pend], rout[pend]
                 feas = (
@@ -190,6 +222,8 @@ def _event_loop(
     in_lists = _by_resource(rin, n_res)
     out_lists = _by_resource(rout, n_res)
     cand = np.arange(F)  # at t0 every flow is a candidate
+    if release is not None:
+        cand = cand[release[cand] <= t]
     while remaining:
         cand = cand[(free_in[rin[cand]] <= t) & (free_out[rout[cand]] <= t)]
         while cand.size:
@@ -210,24 +244,37 @@ def _event_loop(
             break
         t = _pop_next_event(events, t)
         # Gather candidates from the flow lists of resources freed exactly
-        # at t (see the invariant in the docstring).
+        # at t, plus flows released exactly at t (see the invariant in the
+        # docstring).
         pool = [in_lists[r] for r in np.nonzero(free_in == t)[0]]
         pool += [out_lists[r] for r in np.nonzero(free_out == t)[0]]
+        if release is not None:
+            pool.append(rel_map.get(t, np.empty(0, np.int64)))
         cand = np.unique(np.concatenate(pool)) if pool else np.empty(0, np.int64)
         cand = cand[~done[cand]]
+        if release is not None:
+            cand = cand[release[cand] <= t]
     return t_est
 
 
 def _reserving_times(
-    rin: np.ndarray, rout: np.ndarray, srv: np.ndarray, delta: float, n_res: int
+    rin: np.ndarray, rout: np.ndarray, srv: np.ndarray, delta: float,
+    n_res: int, release: np.ndarray | None = None,
 ) -> np.ndarray:
-    """Strict in-order reservation (no backfill) over merged resources."""
+    """Strict in-order reservation (no backfill) over merged resources.
+
+    ``release`` (per flow) is the online variant: flows are given in
+    commitment (arrival) order and each reservation starts no earlier than
+    its release.
+    """
     avail_in = np.zeros(n_res)
     avail_out = np.zeros(n_res)
     t_est = np.empty(rin.size)
     for f in range(rin.size):
         i, j = rin[f], rout[f]
         t = avail_in[i] if avail_in[i] >= avail_out[j] else avail_out[j]
+        if release is not None and release[f] > t:
+            t = release[f]
         tc = t + delta + srv[f]
         avail_in[i] = tc
         avail_out[j] = tc
@@ -243,21 +290,48 @@ def _sunflow_times(
     delta: float,
     n_ports: int,
     K: int,
+    release: np.ndarray | None = None,
+    prio: np.ndarray | None = None,
 ) -> np.ndarray:
     """SUNFLOW-CORE: per core, coflows strictly sequential (barrier), flows of
     one coflow scheduled largest-first.
 
-    Note: the legacy ``schedule_core_sunflow`` leaves ``_run_list_scheduler``'s
-    ``guard`` at its default ``True``, so the intra-coflow scan is the
-    priority-guarded variant — reproduced here with ``guard=True``."""
+    The legacy ``schedule_core_sunflow`` runs ``_run_list_scheduler`` with the
+    priority-guarded scan — reproduced here with ``guard=True``.
+
+    ``release``/``prio`` (per flow; all flows of a coflow share both) select
+    the online variant: whenever the core frees, the *arrived* unserved
+    coflow with the best priority rank is served next, idling until the next
+    arrival if none is pending (matching ``online._sunflow_core_online``).
+    """
     t_est = np.full(table.n_flows, -1.0)
     idx = np.arange(table.n_flows)
     for k in range(K):
         on_k = idx[table.core == k]
         barrier = 0.0
-        # groups in pi order; intra-group largest-first with (i, j) tie-break,
-        # matching circuit_scheduler.schedule_core_sunflow exactly.
-        for pos in np.unique(table.pos[on_k]):
+        if release is None:
+            # groups in pi order; intra-group largest-first with (i, j)
+            # tie-break, matching schedule_core_sunflow exactly.
+            serve_order = list(np.unique(table.pos[on_k]))
+        else:
+            serve_order = None
+            rel_of = {int(table.pos[f]): float(release[f]) for f in on_k}
+            prio_of = {int(table.pos[f]): int(prio[f]) for f in on_k}
+            unserved = set(rel_of)
+        while True:
+            if release is None:
+                if not serve_order:
+                    break
+                pos = serve_order.pop(0)
+            else:
+                if not unserved:
+                    break
+                ready = [p for p in unserved if rel_of[p] <= barrier]
+                if not ready:
+                    barrier = min(rel_of[p] for p in unserved)
+                    ready = [p for p in unserved if rel_of[p] <= barrier]
+                pos = min(ready, key=lambda p: prio_of[p])
+                unserved.remove(pos)
             grp = on_k[table.pos[on_k] == pos]
             order = np.lexsort((table.fj[grp], table.fi[grp], -table.size[grp]))
             grp = grp[order]
@@ -275,30 +349,65 @@ def schedule_all_cores(
     pi: np.ndarray,
     assignment: Assignment,
     scheduling: str = "work-conserving",
+    *,
+    releases: np.ndarray | None = None,
 ) -> Schedule:
     """Schedule every assigned flow on all K cores in one vectorized call.
 
     Drop-in replacement for ``scheduler._schedule_from_assignment``; produces
     identical ``Schedule`` contents (flows in core-major priority order, same
     establishment times bit-for-bit).
+
+    ``releases`` (indexed by ORIGINAL coflow id, like
+    ``OnlineInstance.releases``) switches on the online model: scheduling
+    priority becomes the WSPT rank of each coflow (``online.online_orders``),
+    eligibility is release-gated in the merged event loop, and the sunflow /
+    reserving policies use their online variants. ``releases=None`` is the
+    offline path, byte-identical to before.
     """
     table = FlowTable.from_assignment(assignment)
     K, N = inst.K, inst.N
     rin = table.core * N + table.fi
     rout = table.core * N + table.fj
     srv = table.size / inst.rates[table.core]
-    if scheduling == "work-conserving":
-        t_est = _event_loop(rin, rout, srv, table.core, inst.delta, K * N, N)
-    elif scheduling == "priority-guard":
-        t_est = _event_loop(rin, rout, srv, table.core, inst.delta, K * N, N,
-                            guard=True)
-    elif scheduling == "reserving":
-        t_est = _reserving_times(rin, rout, srv, inst.delta, K * N)
-    elif scheduling == "sunflow":
-        t_est = _sunflow_times(table, rin, rout, srv, inst.delta, N, K)
-    else:
+    if scheduling not in SCHEDULINGS:
         raise ValueError(
             f"unknown scheduling {scheduling!r}; one of {SCHEDULINGS}")
+    if releases is None:
+        if scheduling == "work-conserving":
+            t_est = _event_loop(rin, rout, srv, table.core, inst.delta, K * N, N)
+        elif scheduling == "priority-guard":
+            t_est = _event_loop(rin, rout, srv, table.core, inst.delta, K * N, N,
+                                guard=True)
+        elif scheduling == "reserving":
+            t_est = _reserving_times(rin, rout, srv, inst.delta, K * N)
+        elif scheduling == "sunflow":
+            t_est = _sunflow_times(table, rin, rout, srv, inst.delta, N, K)
+    else:
+        from .online import online_orders
+
+        rel_orig = np.asarray(releases, dtype=np.float64)
+        orig = np.asarray(pi)[table.pos]
+        rel_f = rel_orig[orig]
+        _, prio_rank = online_orders(inst, rel_orig)
+        prio_f = prio_rank[orig]
+        if scheduling in ("work-conserving", "priority-guard"):
+            # The event loop wants flows in scheduling-priority order: WSPT
+            # coflow rank, then the intra-coflow assignment order (stable).
+            perm = np.argsort(prio_f, kind="stable")
+            te = _event_loop(
+                rin[perm], rout[perm], srv[perm], table.core[perm],
+                inst.delta, K * N, N, guard=(scheduling == "priority-guard"),
+                release=rel_f[perm])
+            t_est = np.empty_like(te)
+            t_est[perm] = te
+        elif scheduling == "reserving":
+            # commitment in arrival order == the FlowTable's native order
+            t_est = _reserving_times(rin, rout, srv, inst.delta, K * N,
+                                     release=rel_f)
+        elif scheduling == "sunflow":
+            t_est = _sunflow_times(table, rin, rout, srv, inst.delta, N, K,
+                                   release=rel_f, prio=prio_f)
 
     # Materialize ScheduledFlow records in the legacy order: core-major,
     # priority order within each core (schedule_core_sunflow emits coflow
@@ -362,6 +471,34 @@ def run_fast(
     return schedule_all_cores(inst, pi, a, scheduling)
 
 
+def run_fast_online(
+    oinst: OnlineInstance,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    scheduling: str = "work-conserving",
+) -> Schedule:
+    """Batched-engine counterpart of ``online.run_online`` (same semantics).
+
+    Arrival-order assignment and the WSPT priority ranking are shared with
+    the oracle (``online.online_orders`` / ``online._assign_at_arrival``);
+    only the release-gated scheduling phase goes through the vectorized
+    engine, so any disagreement with ``run_online`` isolates an engine bug
+    (which is what ``cross_check_online`` and
+    tests/test_online_differential.py look for). With ``releases == 0`` the
+    result is bit-identical to the offline ``run_fast``.
+    """
+    from .online import _assign_at_arrival, online_orders
+
+    inst = oinst.inst
+    rel = np.asarray(oinst.releases, dtype=np.float64)
+    arrival, _ = online_orders(inst, rel)
+    a, forced = _assign_at_arrival(inst, arrival, algorithm, seed)
+    if forced is not None:
+        scheduling = forced
+    return schedule_all_cores(inst, arrival, a, scheduling, releases=rel)
+
+
 def cross_check(
     inst: Instance,
     algorithm: str = "ours",
@@ -408,4 +545,50 @@ def cross_check(
                 f"engine/oracle t_establish mismatch at {kf}: "
                 f"{te!r} vs {legacy_t[kf]!r}")
     validate(fast)
+    return fast
+
+
+def cross_check_online(
+    oinst: OnlineInstance,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    scheduling: str = "work-conserving",
+    atol: float = 1e-6,
+    fast: Schedule | None = None,
+) -> Schedule:
+    """Online differential gate: engine vs ``run_online`` oracle vs validator.
+
+    Runs ``run_fast_online`` AND the legacy per-core online oracle, asserts
+    per-coflow CCT and per-flow establishment-time agreement (within
+    ``atol``; in practice bit-exact), then passes the engine schedule through
+    the independent release-respecting ``simulator.validate``. Returns the
+    engine schedule. Pass ``fast`` to check an engine schedule already
+    computed for the same arguments instead of recomputing it.
+    """
+    from .online import run_online
+    from .simulator import validate
+
+    if fast is None:
+        fast = run_fast_online(oinst, algorithm, seed=seed,
+                               scheduling=scheduling)
+    oracle = run_online(oinst, algorithm, seed=seed, scheduling=scheduling)
+    if not np.allclose(fast.ccts, oracle.ccts, atol=atol, rtol=0.0):
+        worst = int(np.argmax(np.abs(fast.ccts - oracle.ccts)))
+        raise AssertionError(
+            f"online engine/oracle CCT mismatch ({algorithm}, {scheduling}): "
+            f"coflow {worst}: engine={fast.ccts[worst]!r} "
+            f"oracle={oracle.ccts[worst]!r}")
+    key = lambda f: (f.core, f.coflow, f.i, f.j, f.size)
+    fast_t = {key(f): f.t_establish for f in fast.flows}
+    oracle_t = {key(f): f.t_establish for f in oracle.flows}
+    if set(fast_t) != set(oracle_t):
+        raise AssertionError(
+            f"online engine/oracle flow sets differ ({algorithm}, {scheduling})")
+    for kf, te in fast_t.items():
+        if abs(te - oracle_t[kf]) > atol:
+            raise AssertionError(
+                f"online engine/oracle t_establish mismatch at {kf}: "
+                f"{te!r} vs {oracle_t[kf]!r}")
+    validate(fast, releases=oinst.releases)
     return fast

@@ -3,17 +3,39 @@ stated future-work direction (§VI), built on the same per-core machinery.
 
 Model: coflow C_m becomes known at ``release_m``; nothing of it may be
 assigned or scheduled earlier (clairvoyance only of arrived coflows, as in
-the standard online coflow model). We implement an event-driven online
-scheduler:
+the standard online coflow model, and as in the related parallel-network
+coflow work — Chen's non-splitting heterogeneous-network scheduler and the
+O(K)-approximation K-core OCS scheduler — which both treat online WSPT
+re-ranking as the baseline online policy). We implement an event-driven
+online scheduler:
 
   - on each arrival, the new coflow is ordered among the *pending* (arrived,
-    unfinished) coflows by the paper's WSPT score w_m / T_LB(D_m);
-  - its flows are assigned to cores by the same tau-aware greedy rule,
-    against the *current* prefix state (assignment is irrevocable — matching
-    the offline algorithm's per-flow commitment);
-  - each core's circuit scheduler is the not-all-stop list scheduler, with
-    flow eligibility gated on release times (a flow may establish only at or
-    after its coflow's release).
+    unfinished) coflows by the paper's WSPT score w_m / T_LB(D_m) — a heavy
+    late arrival with a higher score therefore JUMPS AHEAD of every pending
+    lower-score coflow. Because the WSPT score of a coflow never changes,
+    re-ranking the pending set at each arrival is equivalent to one static
+    priority ranking of all coflows by score (completed coflows have no
+    pending flows, so their rank is moot); eligibility is what arrivals
+    gate.
+  - its flows are assigned to cores at arrival by the same tau-aware greedy
+    rule (or the rho-only / random baselines), against the *current* prefix
+    state, processing coflows in arrival order (ties broken by WSPT score);
+    assignment is irrevocable — matching the offline algorithm's per-flow
+    commitment;
+  - each core's circuit scheduler is the not-all-stop list scheduler with
+    flows scanned in WSPT priority order and eligibility gated on release
+    times (a flow may establish only at or after its coflow's release). All
+    time comparisons are exact floats — same convention as
+    ``circuit_scheduler`` (a flow is released iff ``release <= t``).
+
+With all releases 0 the arrival order, the priority order, and the offline
+order ``order_coflows(inst)`` coincide, so ``run_online`` reduces to the
+offline ``scheduler.run`` bit-for-bit (asserted in tests).
+
+This module is the *reference oracle* for the online path. The production
+path is ``engine.run_fast_online`` (the vectorized all-cores event loop with
+native release gating), validated against this oracle by
+``engine.cross_check_online`` and tests/test_online_differential.py.
 
 The offline Algorithm 1 on the same instance with all releases forced to 0
 lower-bounds what any online policy could see, so the benchmark reports the
@@ -21,101 +43,167 @@ lower-bounds what any online policy could see, so the benchmark reports the
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-
 import numpy as np
 
-from .assignment import AssignedFlow
-from .coflow import Coflow, Instance, nonzero_flows
-from .lower_bounds import CoreState, global_lb
-from .scheduler import Schedule
-from .circuit_scheduler import ScheduledFlow
+from .assignment import Assignment, assign_random, assign_rho_only, assign_tau_aware
+from .circuit_scheduler import (
+    ScheduledFlow,
+    _run_list_scheduler,
+    schedule_core_list,
+    schedule_core_reserving,
+)
+from .coflow import Instance, OnlineInstance
+from .ordering import priority_scores
+from .scheduler import ALGORITHMS, Schedule
 
-__all__ = ["OnlineInstance", "run_online"]
+__all__ = ["OnlineInstance", "run_online", "online_orders"]
 
 
-@dataclasses.dataclass(frozen=True)
-class OnlineInstance:
-    inst: Instance
-    releases: np.ndarray  # (M,) float64 >= 0
+def online_orders(inst: Instance, rel: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(arrival order, priority rank) shared by the oracle and the engine.
+
+    Arrival order: coflow indices sorted by (release, -WSPT score, index) —
+    the order in which coflows are assigned to cores (assignment happens at
+    arrival and is irrevocable; simultaneous arrivals are assigned in WSPT
+    order, so ``releases == 0`` reproduces the offline order exactly).
+
+    Priority rank: ``prio_rank[orig_id]`` = position of the coflow in the
+    WSPT ordering of ALL coflows (score descending, stable by index). This
+    is the scheduling priority — re-ranking the pending set by WSPT at each
+    arrival is equivalent to this static ranking (scores are
+    time-invariant), which is what makes a vectorized engine path possible.
+    """
+    s = priority_scores(inst)
+    arrival = np.lexsort((-s, rel))
+    prio_order = np.argsort(-s, kind="stable")
+    prio_rank = np.empty(inst.M, dtype=np.int64)
+    prio_rank[prio_order] = np.arange(inst.M)
+    return arrival, prio_rank
 
 
-def run_online(oinst: OnlineInstance) -> Schedule:
-    """Online tau-aware scheduling with arrivals. Returns a Schedule whose
-    feasibility (incl. release-time respect) is validated in tests."""
+def _assign_at_arrival(inst: Instance, arrival: np.ndarray, algorithm: str,
+                       seed: int) -> tuple[Assignment, str | None]:
+    """Per-arrival irrevocable assignment; returns (assignment, forced policy)."""
+    if algorithm in ("ours", "sunflow-core"):
+        a = assign_tau_aware(inst, arrival)
+    elif algorithm == "rho-assign":
+        a = assign_rho_only(inst, arrival)
+    elif algorithm in ("rand-assign", "rand-sunflow"):
+        a = assign_random(inst, arrival, seed=seed)
+    else:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; one of {sorted(ALGORITHMS)}")
+    forced = "sunflow" if algorithm in ("sunflow-core", "rand-sunflow") else None
+    return a, forced
+
+
+def run_online(
+    oinst: OnlineInstance,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    scheduling: str = "work-conserving",
+) -> Schedule:
+    """Online tau-aware scheduling with arrivals — the reference oracle.
+
+    Per-core Python event loops, kept deliberately simple; use
+    ``engine.run_fast_online`` for anything performance-sensitive. Returns a
+    Schedule whose feasibility (incl. release-time respect) is validated by
+    ``simulator.validate(s, releases=...)``.
+
+    ``scheduling`` selects the intra-core policy (as in ``scheduler.run``):
+    ``work-conserving`` / ``priority-guard`` scan pending *released* flows in
+    WSPT priority order at every event; ``reserving`` commits reservations in
+    arrival order (a reservation cannot be made for a coflow that has not
+    arrived), each no earlier than its release. The sunflow baselines serve
+    one coflow at a time: whenever the core frees, the highest-WSPT-score
+    *arrived* unserved coflow is served next (idling until the next arrival
+    if none is pending).
+    """
     inst = oinst.inst
     rel = np.asarray(oinst.releases, dtype=np.float64)
     assert len(rel) == inst.M
 
-    # --- assignment at arrival, WSPT order among same-time arrivals --------
-    order = np.lexsort((
-        [-global_lb(c.demand, inst.R, inst.delta) for c in inst.coflows],
-        [-(c.weight / max(global_lb(c.demand, inst.R, inst.delta), 1e-12))
-         for c in inst.coflows],
-        rel,
-    ))
-    state = CoreState(K=inst.K, N=inst.N, rates=inst.rates, delta=inst.delta)
-    per_coflow: list[list[AssignedFlow]] = [None] * inst.M  # type: ignore
-    for pos, ci in enumerate(order):
-        c = inst.coflows[int(ci)]
-        flows = nonzero_flows(c, order_pos=pos, largest_first=True)
-        placed = []
-        for f in flows:
-            cand = state.candidate_bounds(f.i, f.j, f.size)
-            k = int(np.argmin(cand))
-            state.assign(f.i, f.j, f.size, k)
-            placed.append(AssignedFlow(flow=f, core=k))
-        per_coflow[pos] = placed
+    arrival, prio_rank = online_orders(inst, rel)
+    a, forced = _assign_at_arrival(inst, arrival, algorithm, seed)
+    sched = forced if forced is not None else scheduling
+    rel_pos = rel[arrival]          # release of the coflow at arrival position
+    prio_pos = prio_rank[arrival]   # scheduling priority of that position
 
-    # --- per-core event-driven list scheduling with release gating ---------
     all_scheduled: list[ScheduledFlow] = []
-    # priority of a coflow position = its index in `order` (WSPT at arrival)
-    release_of_pos = rel[order]
     for k in range(inst.K):
-        flows = [(pos, af) for pos, per in enumerate(per_coflow)
-                 for af in per if af.core == k]
-        flows.sort(key=lambda t: t[0])
-        F = len(flows)
         rate = float(inst.rates[k])
-        free_in = np.zeros(inst.N)
-        free_out = np.zeros(inst.N)
-        done = np.zeros(F, dtype=bool)
-        events = sorted({0.0, *release_of_pos.tolist()})
-        heapq.heapify(events)
-        seen = set(events)
-        remaining = F
-        while remaining:
-            if not events:
-                raise RuntimeError("online scheduler deadlock")
-            t = heapq.heappop(events)
-            while events and events[0] == t:
-                heapq.heappop(events)
-            for idx, (pos, af) in enumerate(flows):
-                if done[idx] or release_of_pos[pos] > t + 1e-12:
-                    continue
-                i, j = af.flow.i, af.flow.j
-                if free_in[i] <= t and free_out[j] <= t:
-                    tc = t + inst.delta + af.flow.size / rate
-                    free_in[i] = tc
-                    free_out[j] = tc
-                    done[idx] = True
-                    remaining -= 1
-                    all_scheduled.append(ScheduledFlow(
-                        coflow=pos, cid=af.flow.cid, i=i, j=j, core=k,
-                        size=af.flow.size, t_establish=t, t_start=t + inst.delta,
-                        t_complete=tc))
-                    if tc not in seen:
-                        seen.add(tc)
-                        heapq.heappush(events, tc)
+        on_k = [af for per in a.flows for af in per if af.core == k]
+        if sched in ("work-conserving", "priority-guard"):
+            # WSPT priority scan order: coflow priority rank, then the
+            # intra-coflow assignment (largest-first) order.
+            on_k.sort(key=lambda af: prio_pos[af.flow.coflow])
+            rel_f = np.array([rel_pos[af.flow.coflow] for af in on_k])
+            all_scheduled.extend(schedule_core_list(
+                on_k, k, rate, inst.delta, inst.N,
+                guard=(sched == "priority-guard"), releases=rel_f))
+        elif sched == "reserving":
+            # Reservations are committed in arrival order (list order).
+            rel_f = np.array([rel_pos[af.flow.coflow] for af in on_k])
+            all_scheduled.extend(schedule_core_reserving(
+                on_k, k, rate, inst.delta, inst.N, releases=rel_f))
+        elif sched == "sunflow":
+            all_scheduled.extend(_sunflow_core_online(
+                on_k, k, rate, inst.delta, inst.N, rel_pos, prio_pos))
+        else:
+            raise ValueError(f"unknown scheduling {scheduling!r}")
 
     ccts = np.zeros(inst.M)
     for f in all_scheduled:
-        orig = int(order[f.coflow])
+        orig = int(arrival[f.coflow])
         ccts[orig] = max(ccts[orig], f.t_complete)
-
-    from .assignment import Assignment
-
-    a = Assignment(inst=inst, pi=order, flows=per_coflow, state=state)
-    return Schedule(inst=inst, pi=order, assignment=a, flows=all_scheduled,
+    return Schedule(inst=inst, pi=arrival, assignment=a, flows=all_scheduled,
                     ccts=ccts)
+
+
+def _sunflow_core_online(
+    flows: list,  # AssignedFlows of one core, arrival-major order
+    core: int,
+    rate: float,
+    delta: float,
+    n_ports: int,
+    rel_pos: np.ndarray,
+    prio_pos: np.ndarray,
+) -> list[ScheduledFlow]:
+    """Online SUNFLOW-CORE: coflow-at-a-time with WSPT pick-next on arrival.
+
+    The core serves exactly one coflow at a time (barrier between coflows,
+    as in ``schedule_core_sunflow``); when it frees, the arrived unserved
+    coflow with the best WSPT rank is served next, idling until the next
+    arrival if none is pending. With all releases 0 this reduces to the
+    offline ``schedule_core_sunflow`` exactly.
+    """
+    groups: dict[int, list] = {}
+    for af in flows:
+        groups.setdefault(af.flow.coflow, []).append(af)
+    unserved = set(groups)
+    out: list[ScheduledFlow] = []
+    barrier = 0.0
+    while unserved:
+        ready = [p for p in unserved if rel_pos[p] <= barrier]
+        if not ready:
+            barrier = min(float(rel_pos[p]) for p in unserved)
+            ready = [p for p in unserved if rel_pos[p] <= barrier]
+        pos = min(ready, key=lambda p: prio_pos[p])
+        unserved.remove(pos)
+        grp = sorted(groups[pos], key=lambda af: (-af.flow.size, af.flow.i,
+                                                  af.flow.j))
+        fi = np.array([af.flow.i for af in grp], dtype=np.int64)
+        fj = np.array([af.flow.j for af in grp], dtype=np.int64)
+        sizes = np.array([af.flow.size for af in grp], dtype=np.float64)
+        t_est = _run_list_scheduler(fi, fj, sizes, rate, delta, n_ports,
+                                    t0=barrier, guard=True)
+        for idx, af in enumerate(grp):
+            te = float(t_est[idx])
+            tc = te + delta + af.flow.size / rate
+            out.append(ScheduledFlow(
+                coflow=af.flow.coflow, cid=af.flow.cid, i=af.flow.i,
+                j=af.flow.j, core=core, size=af.flow.size, t_establish=te,
+                t_start=te + delta, t_complete=tc))
+            barrier = max(barrier, tc)
+    return out

@@ -8,7 +8,11 @@ Checks, from first principles (Section III-C/D semantics):
   3. demand conservation — per coflow, assigned sizes across cores sum back
      to the original demand matrix entry-wise;
   4. CCT consistency — reported CCTs equal the max completion over the
-     coflow's flows.
+     coflow's flows;
+  5. (online, when ``releases`` is given) release respect — no flow
+     establishes before its coflow's release time. Exact comparison: both
+     scheduler paths start flows only at event times >= the release float,
+     so no tolerance is needed (or granted).
 
 Every benchmark result in this repo passes through ``validate``.
 """
@@ -23,8 +27,17 @@ __all__ = ["validate"]
 _EPS = 1e-6
 
 
-def validate(s: Schedule) -> None:
+def validate(s: Schedule, releases: np.ndarray | None = None) -> None:
     inst = s.inst
+    # --- 5. release respect (online schedules) ----------------------------
+    if releases is not None:
+        rel = np.asarray(releases, dtype=np.float64)
+        for f in s.flows:
+            orig = int(s.pi[f.coflow])
+            if f.t_establish < rel[orig]:
+                raise AssertionError(
+                    f"flow {f} establishes before coflow {orig}'s release "
+                    f"{rel[orig]!r}")
     # --- 2. timing / non-preemption --------------------------------------
     for f in s.flows:
         rate = float(inst.rates[f.core])

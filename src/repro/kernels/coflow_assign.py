@@ -111,6 +111,10 @@ def coflow_assign_fwd(
 ) -> jax.Array:
     """Returns choices (F,) int32 — the core assigned to each flow."""
     f = fi.shape[0]
+    if f == 0:
+        # An empty flow list would make bf = 0 and a zero-size BlockSpec,
+        # which pallas_call rejects; there is nothing to assign.
+        return jnp.zeros((0,), jnp.int32)
     k_cores = rates.shape[0]
     bf = min(block_f, f)
     pad = (-f) % bf

@@ -157,6 +157,39 @@ class TestAssignment:
         counts = np.bincount(cores, minlength=3)
         assert counts.max() - counts.min() <= 1
 
+    def test_prefix_per_core_cached_matches_scratch_rebuild(self):
+        """The cached cumulative prefix must equal the old from-scratch
+        rebuild bit-for-bit, for forward scans, repeats, and backward
+        jumps — and a scan over all prefixes must not mutate earlier
+        results (returned arrays are copies)."""
+        rng = np.random.default_rng(7)
+        demands = [rng.uniform(0, 4, (5, 5)) * (rng.random((5, 5)) < 0.5)
+                   for _ in range(6)]
+        for d in demands:
+            if not d.any():
+                d[0, 0] = 1.0
+        inst = mk_inst(demands)
+        pi = order_coflows(inst)
+        a = assign_tau_aware(inst, pi)
+
+        def scratch(m_pos):  # the pre-cache implementation, verbatim
+            out = np.zeros((inst.K, inst.N, inst.N))
+            for p in range(m_pos + 1):
+                for af in a.flows[p]:
+                    out[af.core, af.flow.i, af.flow.j] += af.flow.size
+            return out
+
+        # forward scan (the theory-check pattern), with a repeat and
+        # backward jumps interleaved
+        for m in [0, 1, 2, 2, 5, 3, 0, 4, 5]:
+            np.testing.assert_array_equal(a.prefix_per_core(m), scratch(m))
+        first = a.prefix_per_core(0)
+        a.prefix_per_core(5)[:] = -1.0  # mutate a returned copy
+        np.testing.assert_array_equal(a.prefix_per_core(0), first)
+        # consistency with the per-coflow increments
+        total = sum(a.per_core_demand(p) for p in range(len(demands)))
+        np.testing.assert_allclose(a.prefix_per_core(5), total, atol=1e-12)
+
     def test_random_assignment_rate_proportional(self):
         N = 4
         D = np.full((N, N), 1.0)

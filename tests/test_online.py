@@ -1,27 +1,26 @@
-"""Online-arrival extension: feasibility + reduction to the offline case."""
+"""Online-arrival extension: feasibility, reduction to the offline case, and
+the exact-tolerance convention for release/completion event collisions."""
 import numpy as np
 
-from repro.core import Coflow, Instance, check_lemma1, sample_instance, synth_fb_trace
-from repro.core.online import OnlineInstance, run_online
+from repro.core import (
+    Coflow,
+    Instance,
+    OnlineInstance,
+    check_lemma1,
+    run_fast_online,
+    run_online,
+    sample_instance,
+    synth_fb_trace,
+    validate,
+)
 
 
 def _validate_online(s, releases):
-    # port exclusivity + release gating + timing
-    for k in range(s.inst.K):
-        for axis in ("i", "j"):
-            ivs = {}
-            for f in s.flows:
-                if f.core != k:
-                    continue
-                ivs.setdefault(getattr(f, axis), []).append(
-                    (f.t_establish, f.t_complete))
-            for port, lst in ivs.items():
-                lst.sort()
-                for (s0, e0), (s1, _) in zip(lst, lst[1:]):
-                    assert s1 >= e0 - 1e-6, (k, axis, port)
+    # independent referee: port exclusivity + timing + release gating
+    validate(s, releases=releases)
     for f in s.flows:
         orig = int(s.pi[f.coflow])
-        assert f.t_establish >= releases[orig] - 1e-9
+        assert f.t_establish >= releases[orig]
 
 
 def test_online_zero_releases_feasible_and_bounded():
@@ -53,4 +52,55 @@ def test_online_respects_releases_and_degrades_gracefully():
     s = run_online(OnlineInstance(inst=inst, releases=rel))
     _validate_online(s, rel)
     # every coflow completes after its release
-    assert (s.ccts >= rel - 1e-9).all()
+    assert (s.ccts >= rel).all()
+
+
+def test_release_colliding_with_completion_exact_tolerance():
+    """Regression for the old mixed-epsilon convention (release gating used
+    ``> t + 1e-12`` while port-free checks used exact ``<= t``): releases
+    that collide with a completion time — exactly, or within one float ulp
+    on either side — must follow ONE exact rule. A release exactly at a
+    completion event starts then; one ulp later must NOT start at the
+    completion event (the old epsilon would have, violating the release by
+    a rounding margin); one ulp earlier waits for the port.
+    """
+    rate, delta, size = 10.0, 2.0, 30.0
+    tc = delta + size / rate  # completion of the first coflow: 5.0
+    D = np.zeros((2, 2))
+    D[0, 0] = size
+    for bump, expect in [
+        (0.0, tc),                          # release == completion: starts then
+        (np.nextafter(tc, np.inf) - tc, np.nextafter(tc, np.inf)),  # +1 ulp
+        (np.nextafter(tc, -np.inf) - tc, tc),                       # -1 ulp
+    ]:
+        release = tc + bump
+        inst = Instance(
+            coflows=(Coflow(cid=0, demand=D), Coflow(cid=1, demand=D)),
+            rates=np.array([rate]), delta=delta)
+        rel = np.array([0.0, release])
+        oinst = OnlineInstance(inst=inst, releases=rel)
+        for s in (run_online(oinst), run_fast_online(oinst)):
+            _validate_online(s, rel)
+            te = {int(s.pi[f.coflow]): f.t_establish for f in s.flows}
+            assert te[0] == 0.0
+            assert te[1] == expect, (bump, te)
+
+
+def test_late_heavy_arrival_overtakes_deterministic():
+    """The tentpole bug: a heavy late arrival must outrank earlier pending
+    coflows (the legacy model froze priorities at arrival order)."""
+    D = np.zeros((2, 2))
+    D[0, 0] = 100.0
+    lights = tuple(Coflow(cid=i, demand=D, weight=1.0) for i in range(3))
+    Dh = np.zeros((2, 2))
+    Dh[0, 0] = 10.0
+    heavy = Coflow(cid=3, demand=Dh, weight=1000.0)
+    inst = Instance(coflows=(*lights, heavy), rates=np.array([10.0]),
+                    delta=0.0)
+    rel = np.array([0.0, 0.0, 0.0, 5.0])
+    s = run_online(OnlineInstance(inst=inst, releases=rel))
+    te = {int(s.pi[f.coflow]): f.t_establish for f in s.flows}
+    # light 0 in service at the heavy arrival; heavy preempts the QUEUE (not
+    # the in-service flow): it goes next, ahead of lights 1 and 2.
+    assert te[0] == 0.0 and te[3] == 10.0
+    assert te[3] < te[1] < te[2]

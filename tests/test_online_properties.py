@@ -1,0 +1,104 @@
+"""Property-style suite for the fixed online WSPT model (hypothesis-driven).
+
+Pins the three contract properties of the online scheduler:
+  (i)   release respect — no flow establishes before its coflow's release;
+  (ii)  offline reduction — with all releases 0 the online schedule equals
+        the offline ``run(inst, "ours")`` exactly (and the online engine
+        equals the offline engine);
+  (iii) WSPT re-ranking — a late-arriving heavy-weight coflow overtakes
+        pending light coflows (the bug the legacy frozen-at-arrival
+        priority model had).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Coflow,
+    Instance,
+    OnlineInstance,
+    run,
+    run_fast,
+    run_fast_online,
+    run_online,
+    validate,
+)
+
+
+def _instance(K, N, M, delta, seed):
+    rng = np.random.default_rng(seed)
+    coflows = []
+    for cid in range(M):
+        D = rng.exponential(10, (N, N)) * (rng.random((N, N)) < 0.5)
+        if not D.any():
+            D[rng.integers(N), rng.integers(N)] = 1.0
+        coflows.append(
+            Coflow(cid=cid, demand=D, weight=float(rng.integers(1, 10))))
+    rates = np.sort(rng.uniform(1.0, 30.0, K))
+    return Instance(coflows=tuple(coflows), rates=rates, delta=delta)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 8), st.integers(1, 8),
+       st.floats(0.0, 10.0), st.integers(0, 10_000))
+def test_no_flow_establishes_before_release(K, N, M, delta, seed):
+    inst = _instance(K, N, M, delta, seed)
+    rng = np.random.default_rng(seed + 1)
+    rel = rng.uniform(0, 50.0 * M, M)
+    oinst = OnlineInstance(inst=inst, releases=rel)
+    for s in (run_online(oinst), run_fast_online(oinst)):
+        validate(s, releases=rel)  # independent check incl. release respect
+        for f in s.flows:
+            assert f.t_establish >= rel[int(s.pi[f.coflow])]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 8), st.integers(1, 8),
+       st.floats(0.0, 10.0), st.integers(0, 10_000))
+def test_zero_releases_reduce_to_offline(K, N, M, delta, seed):
+    inst = _instance(K, N, M, delta, seed)
+    oinst = OnlineInstance(inst=inst, releases=np.zeros(M))
+    on, off = run_online(oinst), run(inst, "ours")
+    assert np.array_equal(on.ccts, off.ccts)
+    assert np.array_equal(on.pi, off.pi)
+    assert on.flows == off.flows  # same per-core order, times bit-for-bit
+    fast_on, fast_off = run_fast_online(oinst), run_fast(inst, "ours")
+    assert np.array_equal(fast_on.ccts, fast_off.ccts)
+    assert fast_on.flows == fast_off.flows
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 4), st.floats(50.0, 200.0), st.floats(1.0, 10.0),
+       st.floats(0.0, 5.0))
+def test_late_heavy_coflow_overtakes_pending_light(n_light, light_size,
+                                                   heavy_size, delta):
+    """All coflows contend for the single port pair of a 1-core network, so
+    service is strictly serialized. The light coflows arrive at t=0; the
+    heavy one arrives while the first light coflow is still in service, with
+    a WSPT score dominating every light score. Under per-arrival WSPT
+    re-ranking it must be served immediately after the in-service flow —
+    before every pending light coflow (the frozen-priority bug would append
+    it after all of them)."""
+    D = np.zeros((2, 2))
+    D[0, 0] = light_size
+    lights = [Coflow(cid=i, demand=D, weight=1.0) for i in range(n_light)]
+    Dh = np.zeros((2, 2))
+    Dh[0, 0] = heavy_size
+    heavy = Coflow(cid=n_light, demand=Dh, weight=1000.0)
+    inst = Instance(coflows=(*lights, heavy), rates=np.array([10.0]),
+                    delta=delta)
+    first_completion = delta + light_size / 10.0
+    release = first_completion / 2.0
+    rel = np.array([0.0] * n_light + [release])
+    oinst = OnlineInstance(inst=inst, releases=rel)
+    for s in (run_online(oinst), run_fast_online(oinst)):
+        te = {int(s.pi[f.coflow]): f.t_establish for f in s.flows}
+        assert te[n_light] >= release
+        # overtakes every light coflow that was still pending at its arrival
+        pending_lights = [i for i in range(n_light) if te[i] > release]
+        assert pending_lights, "construction must leave pending light coflows"
+        for i in pending_lights:
+            assert te[n_light] < te[i], (te, release)
