@@ -25,6 +25,7 @@ def main(argv=None) -> int:
 
     t0 = time.time()
     from benchmarks import (
+        bench_assignment,
         bench_core_scaling,
         comm_planner,
         common,
@@ -58,6 +59,8 @@ def main(argv=None) -> int:
     online_arrivals.main(seeds=(0, 1) if args.full else (0,))
     print("#" * 72)
     bench_core_scaling.main(workers=args.workers)
+    print("#" * 72)
+    bench_assignment.main(workers=args.workers)
     print("#" * 72)
     roofline_report.main()
     if not args.skip_comm:

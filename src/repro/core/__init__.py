@@ -5,11 +5,14 @@ and trace-driven workload generation.
 """
 from .batch import ResultTable, SweepRow, run_batch  # noqa: F401
 from .engine import (  # noqa: F401
+    BACKENDS,
     SCHEDULINGS,
     FlowTable,
+    build_flow_table,
     cross_check,
     cross_check_online,
     run_fast,
+    run_fast_metrics,
     run_fast_online,
     schedule_all_cores,
 )
@@ -17,16 +20,27 @@ from .online import OnlineInstance, run_online  # noqa: F401
 from .assignment import (  # noqa: F401
     AssignedFlow,
     Assignment,
+    assign_fast,
     assign_random,
     assign_rho_only,
     assign_tau_aware,
+    assignment_from_choices,
 )
 from .circuit_scheduler import (  # noqa: F401
     ScheduledFlow,
     schedule_core_list,
     schedule_core_sunflow,
 )
-from .coflow import Coflow, Flow, Instance, col_loads, rho, row_loads, tau  # noqa: F401
+from .coflow import (  # noqa: F401
+    Coflow,
+    Flow,
+    Instance,
+    col_loads,
+    extract_flows,
+    rho,
+    row_loads,
+    tau,
+)
 from .lower_bounds import CoreState, global_lb, per_core_lb  # noqa: F401
 from .ordering import order_coflows, priority_scores  # noqa: F401
 from .scheduler import ALGORITHMS, Schedule, run, tail_cct, weighted_cct  # noqa: F401

@@ -16,10 +16,19 @@ import dataclasses
 
 import numpy as np
 
-from .coflow import Flow, Instance, nonzero_flows
+from .coflow import Flow, Instance, extract_flows, nonzero_flows
 from .lower_bounds import CoreState
 
-__all__ = ["AssignedFlow", "Assignment", "assign_tau_aware", "assign_rho_only", "assign_random"]
+__all__ = [
+    "AssignedFlow",
+    "Assignment",
+    "assign_tau_aware",
+    "assign_rho_only",
+    "assign_random",
+    "ASSIGN_POLICIES",
+    "assign_fast",
+    "assignment_from_choices",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,4 +133,177 @@ def assign_random(inst: Instance, pi: np.ndarray, *, seed: int = 0) -> Assignmen
             state.assign(f.i, f.j, f.size, k)
             placed.append(AssignedFlow(flow=f, core=k))
         out.append(placed)
+    return Assignment(inst=inst, pi=pi, flows=out, state=state)
+
+
+# --------------------------------------------------------------------------
+# Flat-array assignment front-end (no per-flow Python objects).
+#
+# ``assign_fast`` re-implements the three policies above over the flat flow
+# arrays of ``coflow.extract_flows``, updating CoreState-equivalent per-core
+# load/tau/bound state in place and returning only the (F,) core-choice
+# vector. Choices are bit-identical to the dataclass oracles: every float
+# operation below mirrors the corresponding CoreState expression (same IEEE
+# double ops in the same order; max/argmin are exact selections with the same
+# lowest-index tie-break), which the differential suite
+# (tests/test_assign_fast.py) asserts across the randomized grid.
+# --------------------------------------------------------------------------
+
+ASSIGN_POLICIES = ("tau-aware", "rho-only", "random")
+
+
+def _flat_tau_aware(fi, fj, sizes, rates, delta: float, n_ports: int) -> np.ndarray:
+    """Flat greedy tau-aware choices; mirrors CoreState candidate/assign.
+
+    Per-core state lives in plain Python lists (K is small, single digits):
+    a scalar inner loop over cores beats (K,)-vectorized numpy by ~10x at
+    this size because it never allocates temporaries — this is what closes
+    the per-flow Python-object hot loop on the numpy backend.
+    """
+    K = len(rates)
+    choices = np.empty(fi.size, dtype=np.int64)
+    # per core: (row_load, col_load, row_tau, col_tau, nz bitmap, rate)
+    cores = [
+        ([0.0] * n_ports, [0.0] * n_ports, [0] * n_ports, [0] * n_ports,
+         bytearray(n_ports * n_ports), float(rates[k]))
+        for k in range(K)
+    ]
+    bound = [0.0] * K
+    inf = float("inf")
+    t = 0
+    for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
+        ij = i * n_ports + j
+        best = inf
+        kb = 0
+        k = 0
+        for rl, cl, rt, ct, nzk, rk in cores:
+            new = 0 if nzk[ij] else 1
+            li = (rl[i] + d) / rk + (rt[i] + new) * delta
+            lj = (cl[j] + d) / rk + (ct[j] + new) * delta
+            b = bound[k]
+            if li > b:
+                b = li
+            if lj > b:
+                b = lj
+            if b < best:  # strict: argmin ties -> lowest core index
+                best = b
+                kb = k
+            k += 1
+        rl, cl, rt, ct, nzk, rk = cores[kb]
+        if not nzk[ij]:
+            nzk[ij] = 1
+            rt[i] += 1
+            ct[j] += 1
+        rl[i] = rli = rl[i] + d
+        cl[j] = clj = cl[j] + d
+        li = rli / rk + rt[i] * delta
+        lj = clj / rk + ct[j] * delta
+        b = bound[kb]
+        if li > b:
+            b = li
+        if lj > b:
+            b = lj
+        bound[kb] = b
+        choices[t] = kb
+        t += 1
+    return choices
+
+
+def _flat_rho_only(fi, fj, sizes, rates, n_ports: int) -> np.ndarray:
+    """Flat RHO-ASSIGN choices; mirrors CoreState.candidate_rho_bounds.
+
+    The oracle recomputes ``rho^k_{1:m}`` from scratch per flow (an O(K*N)
+    scan); loads only grow, so a running per-core max is exactly equal (max
+    is a selection, no rounding) and O(1) per flow.
+    """
+    K = len(rates)
+    choices = np.empty(fi.size, dtype=np.int64)
+    cores = [([0.0] * n_ports, [0.0] * n_ports, float(rates[k])) for k in range(K)]
+    cur_rho = [0.0] * K  # running max port load per core
+    inf = float("inf")
+    t = 0
+    for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
+        best = inf
+        kb = 0
+        k = 0
+        for rl, cl, rk in cores:
+            li = rl[i] + d
+            lj = cl[j] + d
+            c = cur_rho[k]
+            if li > c:
+                c = li
+            if lj > c:
+                c = lj
+            c = c / rk
+            if c < best:
+                best = c
+                kb = k
+            k += 1
+        rl, cl, _rk = cores[kb]
+        rl[i] = rli = rl[i] + d
+        cl[j] = clj = cl[j] + d
+        c = cur_rho[kb]
+        if rli > c:
+            c = rli
+        if clj > c:
+            c = clj
+        cur_rho[kb] = c
+        choices[t] = kb
+        t += 1
+    return choices
+
+
+def assign_fast(
+    inst: Instance,
+    pi: np.ndarray,
+    policy: str = "tau-aware",
+    *,
+    seed: int = 0,
+    flows: tuple[np.ndarray, ...] | None = None,
+) -> np.ndarray:
+    """Flat-array assignment: per-flow core choices without Flow objects.
+
+    ``flows`` is the ``(pos, cid, fi, fj, size)`` tuple from
+    ``coflow.extract_flows(inst, pi)`` (recomputed when omitted); the
+    returned ``(F,)`` int64 vector aligns with it. Choices are bit-identical
+    to ``assign_tau_aware`` / ``assign_rho_only`` / ``assign_random`` on the
+    same instance and order.
+    """
+    if flows is None:
+        flows = extract_flows(inst, pi)
+    _pos, _cid, fi, fj, sizes = flows
+    if policy == "tau-aware":
+        return _flat_tau_aware(fi, fj, sizes, inst.rates, float(inst.delta), inst.N)
+    if policy == "rho-only":
+        return _flat_rho_only(fi, fj, sizes, inst.rates, inst.N)
+    if policy == "random":
+        # One vectorized draw: Generator.choice(size=F) consumes the bit
+        # stream exactly like F sequential scalar draws (asserted in tests).
+        rng = np.random.default_rng(seed)
+        return rng.choice(inst.K, size=fi.size, p=inst.rates / inst.R).astype(np.int64)
+    raise ValueError(f"unknown policy {policy!r}; one of {ASSIGN_POLICIES}")
+
+
+def assignment_from_choices(
+    inst: Instance,
+    pi: np.ndarray,
+    flows: tuple[np.ndarray, ...],
+    choices: np.ndarray,
+) -> Assignment:
+    """Materialize a full :class:`Assignment` from flat arrays + choices.
+
+    The object-building inverse of the flat path — used where the dataclass
+    contract is still wanted (oracle replay in ``engine.cross_check``, theory
+    certificates). Replays ``CoreState.assign`` per flow so the resulting
+    ``state`` matches the dataclass oracles bit-for-bit.
+    """
+    pos, cid, fi, fj, sizes = flows
+    state = CoreState(K=inst.K, N=inst.N, rates=inst.rates, delta=inst.delta)
+    out: list[list[AssignedFlow]] = [[] for _ in range(len(pi))]
+    for t in range(pos.size):
+        k = int(choices[t])
+        f = Flow(coflow=int(pos[t]), cid=int(cid[t]), i=int(fi[t]),
+                 j=int(fj[t]), size=float(sizes[t]))
+        state.assign(f.i, f.j, f.size, k)
+        out[f.coflow].append(AssignedFlow(flow=f, core=k))
     return Assignment(inst=inst, pi=pi, flows=out, state=state)

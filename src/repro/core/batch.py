@@ -28,7 +28,7 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from .coflow import Instance, OnlineInstance
-from .scheduler import ALGORITHMS, Schedule, tail_cct
+from .scheduler import ALGORITHMS, Schedule, tail_quantile
 
 __all__ = ["SweepRow", "ResultTable", "run_batch"]
 
@@ -76,7 +76,17 @@ class ResultTable:
         return ResultTable(out)
 
     def column(self, name: str, **where) -> np.ndarray:
-        return np.array([getattr(r, name) for r in self.filter(**where).rows])
+        """Column values of the rows matching ``where``.
+
+        Raises ``ValueError`` when the filter matches no rows (a silent empty
+        array used to flow into ``mean`` as RuntimeWarnings + NaN, hiding
+        typos in filter values).
+        """
+        rows = self.filter(**where).rows
+        if not rows:
+            raise ValueError(
+                f"no rows match filter {where!r} (table has {len(self.rows)} rows)")
+        return np.array([getattr(r, name) for r in rows])
 
     def mean(self, name: str, **where) -> float:
         return float(self.column(name, **where).mean())
@@ -114,42 +124,70 @@ def _start_method() -> str:
 
 def _run_one(payload) -> SweepRow:
     """Worker body: one grid point -> SweepRow. Must stay picklable."""
-    (idx, inst, rel, alg, sched, seed, check) = payload
-    from .engine import cross_check, cross_check_online, run_fast, run_fast_online
+    (idx, inst, rel, alg, sched, seed, check, backend, materialize) = payload
+    from .engine import (
+        cross_check,
+        cross_check_online,
+        run_fast,
+        run_fast_metrics,
+        run_fast_online,
+    )
 
+    if materialize == "metrics":
+        t0 = time.perf_counter()
+        ccts, n_flows = run_fast_metrics(inst, alg, seed=seed, scheduling=sched,
+                                         backend=backend, releases=rel)
+        wall = time.perf_counter() - t0
+        return _row_from_ccts(idx, alg, sched, seed, inst.weights, ccts,
+                              n_flows, wall)
     t0 = time.perf_counter()
     if rel is None:
-        s = run_fast(inst, alg, seed=seed, scheduling=sched)
+        s = run_fast(inst, alg, seed=seed, scheduling=sched, backend=backend)
     else:
         oinst = OnlineInstance(inst=inst, releases=rel)
-        s = run_fast_online(oinst, alg, seed=seed, scheduling=sched)
+        s = run_fast_online(oinst, alg, seed=seed, scheduling=sched,
+                            backend=backend)
     wall = time.perf_counter() - t0
     if check == "oracle":
         if rel is None:
-            cross_check(inst, alg, seed=seed, scheduling=sched, fast=s)
+            cross_check(inst, alg, seed=seed, scheduling=sched, fast=s,
+                        backend=backend)
         else:
-            cross_check_online(oinst, alg, seed=seed, scheduling=sched, fast=s)
+            cross_check_online(oinst, alg, seed=seed, scheduling=sched, fast=s,
+                               backend=backend)
     elif check == "validate":
         from .simulator import validate
         validate(s, releases=rel)
     return _row_from_schedule(idx, alg, sched, seed, s, wall)
 
 
-def _row_from_schedule(idx: int, alg: str, sched: str, seed: int,
-                       s: Schedule, wall: float) -> SweepRow:
+def _row_from_ccts(idx: int, alg: str, sched: str, seed: int,
+                   weights: np.ndarray, ccts: np.ndarray, n_flows: int,
+                   wall: float) -> SweepRow:
+    """SweepRow straight from flat per-coflow CCTs (metrics-only path).
+
+    An empty instance (M == 0) yields an all-zero-metric row rather than
+    tripping ``np.quantile`` on an empty array.
+    """
     return SweepRow(
         instance=idx,
         algorithm=alg,
         scheduling=sched,
         seed=seed,
-        weighted_cct=s.total_weighted_cct,
-        total_cct=s.total_cct,
-        p95=tail_cct(s, 0.95),
-        p99=tail_cct(s, 0.99),
-        makespan=float(s.ccts.max()) if s.ccts.size else 0.0,
-        n_flows=len(s.flows),
+        weighted_cct=float((weights * ccts).sum()),
+        total_cct=float(ccts.sum()),
+        p95=tail_quantile(ccts, 0.95),
+        p99=tail_quantile(ccts, 0.99),
+        makespan=float(ccts.max()) if ccts.size else 0.0,
+        n_flows=n_flows,
         wall_s=wall,
     )
+
+
+def _row_from_schedule(idx: int, alg: str, sched: str, seed: int,
+                       s: Schedule, wall: float) -> SweepRow:
+    return _row_from_ccts(idx, alg, sched, seed, s.inst.weights, s.ccts,
+                          len(s.flows), wall)
 
 
 def run_batch(
@@ -162,6 +200,8 @@ def run_batch(
     check: str = "validate",
     workers: int | None = None,
     releases: Sequence[np.ndarray | None] | None = None,
+    backend: str = "numpy",
+    materialize: str = "full",
 ) -> ResultTable:
     """Run a whole sweep grid through the batched engine.
 
@@ -183,12 +223,27 @@ def run_batch(
     ``check``: "validate" (default) runs the independent feasibility
     validator on every schedule (release-respecting for online points);
     "oracle" additionally cross-checks against the legacy per-core scheduler
-    (exact agreement); "none" skips both.
+    (exact agreement, including the assignment-phase core choices); "none"
+    skips both.
+
+    ``backend``: assignment-phase backend for every grid point
+    (``engine.BACKENDS``) — "numpy" (default, bit-identical to the oracles)
+    or "pallas" (tau-aware policy on the TPU kernel).
+
+    ``materialize``: "full" (default) builds ``Schedule`` objects per grid
+    point; "metrics" computes ``SweepRow`` metrics straight from the flat
+    engine arrays — no ``ScheduledFlow``/``Assignment`` objects at all, the
+    production sweep mode at trace scale. Metrics mode requires
+    ``check="none"`` (both checkers consume the materialized objects; the
+    legacy object-building path stays the oracle and is exercised by
+    ``check="oracle"`` sweeps and the differential suites).
 
     ``workers``: 0 or 1 for in-process serial execution; ``None`` picks a
     sensible default (serial for small grids, one process per CPU otherwise).
     Rows come back in deterministic grid order regardless of worker count.
     """
+    from .engine import BACKENDS
+
     algorithms = tuple(algorithms)
     schedulings = tuple(schedulings)
     seeds = tuple(seeds)
@@ -197,6 +252,14 @@ def run_batch(
         raise ValueError(f"unknown algorithms {sorted(unknown)}")
     if check not in ("none", "validate", "oracle"):
         raise ValueError(f"unknown check {check!r}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if materialize not in ("full", "metrics"):
+        raise ValueError(f"unknown materialize {materialize!r}")
+    if materialize == "metrics" and check != "none":
+        raise ValueError(
+            'materialize="metrics" skips schedule objects, so it requires '
+            f'check="none" (got check={check!r})')
     if pair_seeds and len(seeds) != len(instances):
         raise ValueError(
             f"pair_seeds=True needs len(seeds) == len(instances), "
@@ -217,10 +280,12 @@ def run_batch(
         for seed in inst_seeds:
             for alg in algorithms:
                 if alg in _SUNFLOW_ALGS:
-                    grid.append((idx, inst, rel, alg, "sunflow", seed, check))
+                    grid.append((idx, inst, rel, alg, "sunflow", seed, check,
+                                 backend, materialize))
                 else:
                     for sched in schedulings:
-                        grid.append((idx, inst, rel, alg, sched, seed, check))
+                        grid.append((idx, inst, rel, alg, sched, seed, check,
+                                     backend, materialize))
 
     if workers is None:
         workers = 0 if len(grid) < 4 else min(os.cpu_count() or 1, len(grid), 16)

@@ -23,6 +23,7 @@ __all__ = [
     "rho",
     "tau",
     "nonzero_flows",
+    "extract_flows",
 ]
 
 
@@ -200,3 +201,37 @@ def nonzero_flows(c: Coflow, order_pos: int, *, largest_first: bool = True) -> l
         Flow(coflow=order_pos, cid=c.cid, i=int(ii[t]), j=int(jj[t]), size=float(sizes[t]))
         for t in key
     ]
+
+
+def extract_flows(
+    inst: Instance, pi: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """All nonzero flows of an instance as flat arrays, in global pi order.
+
+    Vectorized counterpart of calling :func:`nonzero_flows` per coflow along
+    ``pi`` (largest-first): the stacked demand tensor is scanned with one
+    ``np.nonzero`` and one ``np.lexsort``, so no per-flow :class:`Flow`
+    objects are built. The returned order is bit-identical to the dataclass
+    path — grouped by position in ``pi``, intra-coflow non-increasing size
+    with (i, j) tie-break.
+
+    Returns ``(pos, cid, fi, fj, size)``: position in ``pi``, original coflow
+    id, ingress port, egress port (all int64) and size (float64), each of
+    shape ``(F,)``.
+    """
+    pi = np.asarray(pi, dtype=np.int64)
+    if inst.M == 0:
+        e = np.zeros(0, dtype=np.int64)
+        return e, e.copy(), e.copy(), e.copy(), np.zeros(0)
+    D = np.stack([inst.coflows[int(c)].demand for c in pi])
+    # Coflow.cid is a free field (instances built from subsets keep their
+    # original ids), so map positions through the actual cids, not pi.
+    cids = np.fromiter((inst.coflows[int(c)].cid for c in pi),
+                       dtype=np.int64, count=len(pi))
+    pos, ii, jj = np.nonzero(D)
+    sizes = D[pos, ii, jj]
+    # Same sort key as nonzero_flows, with the coflow position as the
+    # outermost (most significant) key.
+    order = np.lexsort((jj, ii, -sizes, pos))
+    pos = pos[order]
+    return pos, cids[pos], ii[order], jj[order], sizes[order]

@@ -32,18 +32,28 @@ import heapq
 
 import numpy as np
 
-from .assignment import Assignment, assign_random, assign_rho_only, assign_tau_aware
+from .assignment import (
+    Assignment,
+    assign_fast,
+    assign_random,
+    assign_rho_only,
+    assign_tau_aware,
+    assignment_from_choices,
+)
 from .circuit_scheduler import ScheduledFlow
-from .coflow import Instance, OnlineInstance
+from .coflow import Instance, OnlineInstance, extract_flows
 from .ordering import order_coflows, priority_scores
 from .scheduler import Schedule
 
 __all__ = [
     "FlowTable",
     "SCHEDULINGS",
+    "BACKENDS",
+    "build_flow_table",
     "schedule_all_cores",
     "run_fast",
     "run_fast_online",
+    "run_fast_metrics",
     "cross_check",
     "cross_check_online",
 ]
@@ -52,6 +62,22 @@ __all__ = [
 #: coflow-at-a-time policy used by the SUNFLOW-CORE baselines; the other
 #: three mirror ``scheduler.run``'s ``scheduling`` argument.
 SCHEDULINGS = ("work-conserving", "priority-guard", "reserving", "sunflow")
+
+#: Assignment-phase backends. ``numpy`` runs the flat-array re-implementation
+#: of the Python oracles (bit-identical choices); ``pallas`` dispatches the
+#: tau-aware policy to the ``kernels.ops.coflow_assign`` TPU kernel (fp32
+#: accumulation — see the precision contract in ``kernels.coflow_assign``);
+#: the rho-only and random policies always run the numpy path.
+BACKENDS = ("numpy", "pallas")
+
+#: algorithm name -> flat assignment policy.
+_POLICY_OF = {
+    "ours": "tau-aware",
+    "sunflow-core": "tau-aware",
+    "rho-assign": "rho-only",
+    "rand-assign": "random",
+    "rand-sunflow": "random",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +114,56 @@ class FlowTable:
     @property
     def n_flows(self) -> int:
         return int(self.pos.size)
+
+
+def _resolve_algorithm(algorithm: str, scheduling: str) -> tuple[str, str]:
+    """(assignment policy, effective scheduling) for an algorithm name."""
+    if algorithm not in _POLICY_OF:
+        from .scheduler import ALGORITHMS
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; one of {sorted(ALGORITHMS)}")
+    if algorithm in ("sunflow-core", "rand-sunflow"):
+        scheduling = "sunflow"
+    return _POLICY_OF[algorithm], scheduling
+
+
+def _pallas_choices(inst: Instance, flows: tuple[np.ndarray, ...]) -> np.ndarray:
+    """Tau-aware choices via the Pallas kernel (fp32 precision contract)."""
+    from repro.kernels.ops import coflow_assign
+
+    _pos, _cid, fi, fj, sizes = flows
+    out = coflow_assign(fi, fj, sizes, inst.rates, inst.delta, n_ports=inst.N)
+    return np.asarray(out, dtype=np.int64)
+
+
+def build_flow_table(
+    inst: Instance,
+    pi: np.ndarray,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    backend: str = "numpy",
+) -> FlowTable:
+    """Flat assignment front-end: demand tensors -> assigned ``FlowTable``.
+
+    Runs the vectorized flow extraction (``coflow.extract_flows``) and the
+    flat-array assignment policy of ``algorithm`` without building any
+    per-flow Python objects. ``backend="pallas"`` dispatches the tau-aware
+    policy to the ``kernels.ops.coflow_assign`` TPU kernel (the rho-only and
+    random policies have no kernel and always run the numpy path). On the
+    numpy backend the resulting core choices are bit-identical to the
+    dataclass oracles in ``assignment``.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    policy, _ = _resolve_algorithm(algorithm, "")
+    flows = extract_flows(inst, pi)
+    if backend == "pallas" and policy == "tau-aware":
+        core = _pallas_choices(inst, flows)
+    else:
+        core = assign_fast(inst, pi, policy, seed=seed, flows=flows)
+    pos, cid, fi, fj, size = flows
+    return FlowTable(pos=pos, cid=cid, fi=fi, fj=fj, core=core, size=size)
 
 
 def _first_occurrence(vals: np.ndarray, scratch: np.ndarray) -> np.ndarray:
@@ -344,28 +420,22 @@ def _sunflow_times(
     return t_est
 
 
-def schedule_all_cores(
+def _times_for_table(
     inst: Instance,
     pi: np.ndarray,
-    assignment: Assignment,
+    table: FlowTable,
     scheduling: str = "work-conserving",
-    *,
     releases: np.ndarray | None = None,
-) -> Schedule:
-    """Schedule every assigned flow on all K cores in one vectorized call.
-
-    Drop-in replacement for ``scheduler._schedule_from_assignment``; produces
-    identical ``Schedule`` contents (flows in core-major priority order, same
-    establishment times bit-for-bit).
+) -> tuple[np.ndarray, np.ndarray]:
+    """Scheduling phase over a flat ``FlowTable``: returns (t_est, srv).
 
     ``releases`` (indexed by ORIGINAL coflow id, like
     ``OnlineInstance.releases``) switches on the online model: scheduling
     priority becomes the WSPT rank of each coflow (``online.online_orders``),
     eligibility is release-gated in the merged event loop, and the sunflow /
     reserving policies use their online variants. ``releases=None`` is the
-    offline path, byte-identical to before.
+    offline path.
     """
-    table = FlowTable.from_assignment(assignment)
     K, N = inst.K, inst.N
     rin = table.core * N + table.fi
     rout = table.core * N + table.fj
@@ -408,10 +478,29 @@ def schedule_all_cores(
         elif scheduling == "sunflow":
             t_est = _sunflow_times(table, rin, rout, srv, inst.delta, N, K,
                                    release=rel_f, prio=prio_f)
+    return t_est, srv
 
-    # Materialize ScheduledFlow records in the legacy order: core-major,
-    # priority order within each core (schedule_core_sunflow emits coflow
-    # groups in pi order too, so core-major pi order matches it as well).
+
+def _ccts_from_times(inst: Instance, pi: np.ndarray, table: FlowTable,
+                     t_est: np.ndarray, srv: np.ndarray) -> np.ndarray:
+    """Per-coflow CCTs (original id order) straight from the flat arrays."""
+    ccts = np.zeros(inst.M)
+    t_complete = (t_est + inst.delta) + srv
+    np.maximum.at(ccts, np.asarray(pi)[table.pos], t_complete)
+    return ccts
+
+
+def _schedule_from_times(
+    inst: Instance,
+    pi: np.ndarray,
+    assignment: Assignment | None,
+    table: FlowTable,
+    t_est: np.ndarray,
+    srv: np.ndarray,
+) -> Schedule:
+    """Materialize ScheduledFlow records in the legacy order: core-major,
+    priority order within each core (schedule_core_sunflow emits coflow
+    groups in pi order too, so core-major pi order matches it as well)."""
     order = np.lexsort((np.arange(table.n_flows), table.core))
     flows = []
     for f in order:
@@ -431,10 +520,30 @@ def schedule_all_cores(
                 t_complete=te + inst.delta + s / rate,
             )
         )
-    ccts = np.zeros(inst.M)
-    t_complete = (t_est + inst.delta) + srv
-    np.maximum.at(ccts, np.asarray(pi)[table.pos], t_complete)
+    ccts = _ccts_from_times(inst, pi, table, t_est, srv)
     return Schedule(inst=inst, pi=pi, assignment=assignment, flows=flows, ccts=ccts)
+
+
+def schedule_all_cores(
+    inst: Instance,
+    pi: np.ndarray,
+    assignment: Assignment,
+    scheduling: str = "work-conserving",
+    *,
+    releases: np.ndarray | None = None,
+) -> Schedule:
+    """Schedule every assigned flow on all K cores in one vectorized call.
+
+    Drop-in replacement for ``scheduler._schedule_from_assignment``; produces
+    identical ``Schedule`` contents (flows in core-major priority order, same
+    establishment times bit-for-bit). See ``_times_for_table`` for the online
+    (``releases``) semantics. The flat production path (``run_fast`` /
+    ``run_fast_metrics``) skips this object front-end entirely and schedules
+    a ``FlowTable`` built by ``build_flow_table``.
+    """
+    table = FlowTable.from_assignment(assignment)
+    t_est, srv = _times_for_table(inst, pi, table, scheduling, releases)
+    return _schedule_from_times(inst, pi, assignment, table, t_est, srv)
 
 
 def run_fast(
@@ -443,32 +552,56 @@ def run_fast(
     *,
     seed: int = 0,
     scheduling: str = "work-conserving",
+    backend: str = "numpy",
 ) -> Schedule:
     """Batched-engine counterpart of ``scheduler.run`` (same semantics).
 
-    Ordering and assignment are shared with the legacy path; only the
-    scheduling phase goes through the vectorized engine, so any disagreement
-    with ``scheduler.run`` isolates a scheduling-engine bug (which is what
-    ``cross_check`` and the differential test suite look for).
+    The whole pipeline is flat arrays until the returned ``Schedule`` is
+    materialized: vectorized extraction + flat assignment
+    (``build_flow_table``) feed the vectorized scheduling engine directly —
+    no ``Flow``/``AssignedFlow`` objects are built (the returned schedule's
+    ``assignment`` is ``None``; the legacy object path remains the oracle).
+    On ``backend="numpy"`` the result is bit-identical to ``scheduler.run``
+    (which is what ``cross_check`` and the differential suites assert);
+    ``backend="pallas"`` runs tau-aware assignment on the TPU kernel (fp32
+    precision contract — see ``kernels.coflow_assign``).
     """
     pi = order_coflows(inst)
-    if algorithm == "ours":
-        a = assign_tau_aware(inst, pi)
-    elif algorithm == "rho-assign":
-        a = assign_rho_only(inst, pi)
-    elif algorithm == "rand-assign":
-        a = assign_random(inst, pi, seed=seed)
-    elif algorithm == "sunflow-core":
-        a = assign_tau_aware(inst, pi)
-        scheduling = "sunflow"
-    elif algorithm == "rand-sunflow":
-        a = assign_random(inst, pi, seed=seed)
-        scheduling = "sunflow"
+    _, scheduling = _resolve_algorithm(algorithm, scheduling)
+    table = build_flow_table(inst, pi, algorithm, seed=seed, backend=backend)
+    t_est, srv = _times_for_table(inst, pi, table, scheduling)
+    return _schedule_from_times(inst, pi, None, table, t_est, srv)
+
+
+def run_fast_metrics(
+    inst: Instance,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    scheduling: str = "work-conserving",
+    backend: str = "numpy",
+    releases: np.ndarray | None = None,
+) -> tuple[np.ndarray, int]:
+    """Metrics-only fast path: per-coflow CCTs without object materialization.
+
+    Same pipeline as ``run_fast`` / ``run_fast_online`` (identical CCTs, per
+    the differential suite) but stops at the flat arrays: no ``Schedule``, no
+    ``ScheduledFlow`` or ``Assignment`` objects. Returns ``(ccts, n_flows)``
+    with ``ccts`` indexed by original coflow id — all ``SweepRow`` metrics
+    derive from these, which is what ``run_batch(materialize="metrics")``
+    consumes at trace scale.
+    """
+    if releases is None:
+        pi = order_coflows(inst)
     else:
-        from .scheduler import ALGORITHMS
-        raise ValueError(
-            f"unknown algorithm {algorithm!r}; one of {sorted(ALGORITHMS)}")
-    return schedule_all_cores(inst, pi, a, scheduling)
+        from .online import online_orders
+
+        releases = np.asarray(releases, dtype=np.float64)
+        pi, _ = online_orders(inst, releases)
+    _, scheduling = _resolve_algorithm(algorithm, scheduling)
+    table = build_flow_table(inst, pi, algorithm, seed=seed, backend=backend)
+    t_est, srv = _times_for_table(inst, pi, table, scheduling, releases)
+    return _ccts_from_times(inst, pi, table, t_est, srv), table.n_flows
 
 
 def run_fast_online(
@@ -477,26 +610,109 @@ def run_fast_online(
     *,
     seed: int = 0,
     scheduling: str = "work-conserving",
+    backend: str = "numpy",
 ) -> Schedule:
     """Batched-engine counterpart of ``online.run_online`` (same semantics).
 
-    Arrival-order assignment and the WSPT priority ranking are shared with
-    the oracle (``online.online_orders`` / ``online._assign_at_arrival``);
-    only the release-gated scheduling phase goes through the vectorized
-    engine, so any disagreement with ``run_online`` isolates an engine bug
-    (which is what ``cross_check_online`` and
-    tests/test_online_differential.py look for). With ``releases == 0`` the
-    result is bit-identical to the offline ``run_fast``.
+    The flat pipeline of ``run_fast`` with the arrival order in place of the
+    offline pi: per-arrival irrevocable assignment is the same greedy rule
+    over the same flow order, so the flat choices are bit-identical to the
+    oracle's ``_assign_at_arrival``; the release-gated scheduling phase goes
+    through the vectorized engine (``cross_check_online`` and
+    tests/test_online_differential.py assert agreement with ``run_online``).
+    With ``releases == 0`` the result is bit-identical to the offline
+    ``run_fast``.
     """
-    from .online import _assign_at_arrival, online_orders
-
     inst = oinst.inst
     rel = np.asarray(oinst.releases, dtype=np.float64)
+    from .online import online_orders
+
     arrival, _ = online_orders(inst, rel)
-    a, forced = _assign_at_arrival(inst, arrival, algorithm, seed)
-    if forced is not None:
-        scheduling = forced
-    return schedule_all_cores(inst, arrival, a, scheduling, releases=rel)
+    _, scheduling = _resolve_algorithm(algorithm, scheduling)
+    table = build_flow_table(inst, arrival, algorithm, seed=seed, backend=backend)
+    t_est, srv = _times_for_table(inst, arrival, table, scheduling, releases=rel)
+    return _schedule_from_times(inst, arrival, None, table, t_est, srv)
+
+
+def _oracle_assignment(inst: Instance, pi: np.ndarray, policy: str,
+                       seed: int) -> Assignment:
+    if policy == "tau-aware":
+        return assign_tau_aware(inst, pi)
+    if policy == "rho-only":
+        return assign_rho_only(inst, pi)
+    return assign_random(inst, pi, seed=seed)
+
+
+#: Maximum kernel/assign_ref choice-disagreement *rate* accepted by the
+#: pallas gate — matches the fp32 precision contract in
+#: ``kernels.coflow_assign``. A single tie-break divergence is always allowed
+#: regardless of F (on a tiny instance one expected flip would otherwise blow
+#: the rate); an algorithmic error lands near a 1 - 1/K disagreement rate,
+#: far above this.
+_PALLAS_DIVERGENCE_CEILING = 0.03
+
+
+def _gate_choices(
+    inst: Instance,
+    pi: np.ndarray,
+    policy: str,
+    seed: int,
+    backend: str,
+) -> tuple[tuple[np.ndarray, ...], np.ndarray, Assignment | None]:
+    """Assignment-phase differential gate.
+
+    Returns ``(flat flows, choices, oracle assignment)`` — the dataclass
+    oracle ``Assignment`` is built (and returned for reuse in the legacy
+    replay) on the numpy path, ``None`` on the pallas path.
+
+    numpy backend: the flat ``assign_fast`` choices must be bit-identical to
+    the dataclass oracle's — and, for the tau-aware policy, to the kernel's
+    fp64 reference ``kernels.ref.assign_ref`` as well (three independent
+    implementations in lock-step). pallas backend: the kernel's choices are
+    gated against ``assign_ref`` evaluated at the kernel's fp32-cast inputs;
+    per the kernel's precision contract (fp32 accumulation vs assign_ref's
+    fp64) occasional tie-break divergences are expected, so the gate bounds
+    the divergence count (``max(1, ceil(0.03 * F))``) rather than asserting
+    bit-equality.
+    """
+    flows = extract_flows(inst, pi)
+    if backend == "pallas" and policy == "tau-aware":
+        choices = _pallas_choices(inst, flows)
+        from repro.kernels.ref import assign_ref
+
+        _pos, _cid, fi, fj, sizes = flows
+        ref_c, _ = assign_ref(fi, fj, sizes.astype(np.float32),
+                              inst.rates.astype(np.float32),
+                              float(np.float32(inst.delta)), inst.N)
+        diverged = int((choices != ref_c.astype(np.int64)).sum())
+        allowed = max(1, int(np.ceil(_PALLAS_DIVERGENCE_CEILING * choices.size)))
+        if diverged > allowed:
+            raise AssertionError(
+                f"pallas kernel/assign_ref diverge on {diverged}/{choices.size} "
+                f"choices — beyond the precision-contract allowance ({allowed})")
+        return flows, choices, None
+    oracle_a = _oracle_assignment(inst, pi, policy, seed)
+    oracle_choices = np.array(
+        [af.core for per in oracle_a.flows for af in per], dtype=np.int64)
+    choices = assign_fast(inst, pi, policy, seed=seed, flows=flows)
+    if not np.array_equal(choices, oracle_choices):
+        bad = int(np.argmax(choices != oracle_choices))
+        raise AssertionError(
+            f"assign_fast/{policy} choice mismatch with the dataclass oracle "
+            f"at flow {bad}: {choices[bad]} vs {oracle_choices[bad]}")
+    if policy == "tau-aware":
+        try:
+            from repro.kernels.ref import assign_ref
+        except ImportError:  # core stays usable without jax
+            return flows, choices, oracle_a
+        _pos, _cid, fi, fj, sizes = flows
+        ref_c, _ = assign_ref(fi, fj, sizes, inst.rates, inst.delta, inst.N)
+        if not np.array_equal(choices, ref_c.astype(np.int64)):
+            bad = int(np.argmax(choices != ref_c))
+            raise AssertionError(
+                f"assign_fast/assign_ref choice mismatch at flow {bad}: "
+                f"{choices[bad]} vs {ref_c[bad]}")
+    return flows, choices, oracle_a
 
 
 def cross_check(
@@ -507,27 +723,54 @@ def cross_check(
     scheduling: str = "work-conserving",
     atol: float = 1e-6,
     fast: Schedule | None = None,
+    backend: str = "numpy",
 ) -> Schedule:
     """Differential gate: engine vs legacy oracle vs independent validator.
 
-    Runs the batched engine AND the legacy per-core path, asserts per-coflow
-    CCT agreement (within ``atol``; in practice bit-exact) and per-flow
-    establishment-time agreement, then passes the engine schedule through
-    ``simulator.validate``. Returns the engine schedule. Pass ``fast`` to
-    check an engine schedule already computed for the same arguments instead
-    of recomputing it.
+    Runs the batched engine AND the legacy per-core scheduler, asserts
+    bit-level agreement of the assignment-phase core choices (flat
+    ``assign_fast`` vs the dataclass oracle vs ``kernels.ref.assign_ref``;
+    see ``_gate_choices``), per-coflow CCT agreement (within ``atol``; in
+    practice bit-exact) and per-flow establishment-time agreement, then
+    passes the engine schedule through ``simulator.validate``. Returns the
+    engine schedule. Pass ``fast`` to check an engine schedule already
+    computed for the same arguments instead of recomputing it.
+
+    The legacy replay runs ``scheduler._schedule_from_assignment`` (the same
+    per-core machinery ``scheduler.run`` dispatches to) on the gate's oracle
+    assignment — already asserted choice-by-choice equal to what ``run``
+    would rebuild, so rebuilding it would only duplicate the slow oracle
+    assignment phase. ``backend="pallas"``: choices are gated against
+    ``assign_ref`` at the kernel's fp32 inputs, and the replay uses the
+    *engine's own* assignment (the kernel's fp32 tie-breaks may legitimately
+    differ from the fp64 oracle's, so the replay isolates the scheduling
+    phase under the kernel's precision contract).
     """
-    from .scheduler import run as run_legacy
+    from functools import partial
+
+    from .circuit_scheduler import (
+        schedule_core_list,
+        schedule_core_reserving,
+        schedule_core_sunflow,
+    )
+    from .scheduler import _schedule_from_assignment
     from .simulator import validate
 
     if fast is None:
-        fast = run_fast(inst, algorithm, seed=seed, scheduling=scheduling)
-    if algorithm in ("sunflow-core", "rand-sunflow"):
-        # legacy `run` selects sunflow via the algorithm; its `scheduling`
-        # argument only applies to the list-scheduled algorithms.
-        legacy = run_legacy(inst, algorithm, seed=seed)
-    else:
-        legacy = run_legacy(inst, algorithm, seed=seed, scheduling=scheduling)
+        fast = run_fast(inst, algorithm, seed=seed, scheduling=scheduling,
+                        backend=backend)
+    pi = order_coflows(inst)
+    policy, sched_eff = _resolve_algorithm(algorithm, scheduling)
+    flows, choices, oracle_a = _gate_choices(inst, pi, policy, seed, backend)
+    percore = {
+        "work-conserving": schedule_core_list,
+        "priority-guard": partial(schedule_core_list, guard=True),
+        "reserving": schedule_core_reserving,
+        "sunflow": schedule_core_sunflow,
+    }[sched_eff]
+    if oracle_a is None:  # pallas path: replay the engine's own choices
+        oracle_a = assignment_from_choices(inst, pi, flows, choices)
+    legacy = _schedule_from_assignment(inst, pi, oracle_a, percore)
     if not np.allclose(fast.ccts, legacy.ccts, atol=atol, rtol=0.0):
         worst = int(np.argmax(np.abs(fast.ccts - legacy.ccts)))
         raise AssertionError(
@@ -556,23 +799,43 @@ def cross_check_online(
     scheduling: str = "work-conserving",
     atol: float = 1e-6,
     fast: Schedule | None = None,
+    backend: str = "numpy",
 ) -> Schedule:
     """Online differential gate: engine vs ``run_online`` oracle vs validator.
 
     Runs ``run_fast_online`` AND the legacy per-core online oracle, asserts
+    bit-level agreement of the arrival-order assignment choices (flat vs the
+    ``_assign_at_arrival`` dataclass oracle; see ``_gate_choices``),
     per-coflow CCT and per-flow establishment-time agreement (within
     ``atol``; in practice bit-exact), then passes the engine schedule through
     the independent release-respecting ``simulator.validate``. Returns the
     engine schedule. Pass ``fast`` to check an engine schedule already
     computed for the same arguments instead of recomputing it.
+
+    The oracle runs through ``run_online(assignment=...)``: its scheduling
+    machinery (WSPT ordering, release gating, per-core event loops) runs in
+    full, fed the gate's oracle assignment — already asserted
+    choice-by-choice equal to what ``_assign_at_arrival`` would rebuild.
+    ``backend="pallas"``: the replayed assignment is the *engine's own*
+    kernel choices, so the comparison isolates the scheduling phase under
+    the kernel's fp32 precision contract.
     """
-    from .online import run_online
+    from .online import online_orders, run_online
     from .simulator import validate
 
     if fast is None:
         fast = run_fast_online(oinst, algorithm, seed=seed,
-                               scheduling=scheduling)
-    oracle = run_online(oinst, algorithm, seed=seed, scheduling=scheduling)
+                               scheduling=scheduling, backend=backend)
+    inst = oinst.inst
+    rel = np.asarray(oinst.releases, dtype=np.float64)
+    arrival, _ = online_orders(inst, rel)
+    policy, _sched_eff = _resolve_algorithm(algorithm, scheduling)
+    flows, choices, oracle_a = _gate_choices(inst, arrival, policy, seed,
+                                             backend)
+    if oracle_a is None:  # pallas path: replay the engine's own choices
+        oracle_a = assignment_from_choices(inst, arrival, flows, choices)
+    oracle = run_online(oinst, algorithm, seed=seed, scheduling=scheduling,
+                        assignment=oracle_a)
     if not np.allclose(fast.ccts, oracle.ccts, atol=atol, rtol=0.0):
         worst = int(np.argmax(np.abs(fast.ccts - oracle.ccts)))
         raise AssertionError(

@@ -103,6 +103,7 @@ def run_online(
     *,
     seed: int = 0,
     scheduling: str = "work-conserving",
+    assignment: Assignment | None = None,
 ) -> Schedule:
     """Online tau-aware scheduling with arrivals — the reference oracle.
 
@@ -119,13 +120,24 @@ def run_online(
     one coflow at a time: whenever the core frees, the highest-WSPT-score
     *arrived* unserved coflow is served next (idling until the next arrival
     if none is pending).
+
+    ``assignment``: replay hook for the differential harness — when given,
+    the per-arrival assignment phase is skipped and the provided
+    :class:`Assignment` (in arrival order) is scheduled instead. This is how
+    ``engine.cross_check_online`` replays the Pallas kernel's fp32 choices
+    through the oracle scheduler without re-deriving them in fp64.
     """
     inst = oinst.inst
     rel = np.asarray(oinst.releases, dtype=np.float64)
     assert len(rel) == inst.M
 
     arrival, prio_rank = online_orders(inst, rel)
-    a, forced = _assign_at_arrival(inst, arrival, algorithm, seed)
+    if assignment is None:
+        a, forced = _assign_at_arrival(inst, arrival, algorithm, seed)
+    else:
+        a = assignment
+        forced = ("sunflow" if algorithm in ("sunflow-core", "rand-sunflow")
+                  else None)
     sched = forced if forced is not None else scheduling
     rel_pos = rel[arrival]          # release of the coflow at arrival position
     prio_pos = prio_rank[arrival]   # scheduling priority of that position

@@ -26,16 +26,23 @@ from .circuit_scheduler import (
 from .coflow import Instance
 from .ordering import order_coflows
 
-__all__ = ["Schedule", "run", "ALGORITHMS", "weighted_cct", "tail_cct"]
+__all__ = ["Schedule", "run", "ALGORITHMS", "weighted_cct", "tail_cct",
+           "tail_quantile"]
 
 
 @dataclasses.dataclass
 class Schedule:
-    """A complete feasible schedule plus derived metrics."""
+    """A complete feasible schedule plus derived metrics.
+
+    ``assignment`` is ``None`` on the flat engine path (``engine.run_fast``
+    skips per-flow object materialization); the legacy oracle path and
+    ``engine.schedule_all_cores`` always carry the full ``Assignment``, which
+    the theory certificates (``theory.check_lemma2/3``) require.
+    """
 
     inst: Instance
     pi: np.ndarray
-    assignment: Assignment
+    assignment: Assignment | None
     flows: list[ScheduledFlow]           # all cores
     ccts: np.ndarray                     # (M,) indexed by ORIGINAL coflow id order
 
@@ -135,6 +142,18 @@ def weighted_cct(s: Schedule) -> float:
     return s.total_weighted_cct
 
 
+def tail_quantile(ccts: np.ndarray, q: float) -> float:
+    """p-quantile of a per-coflow CCT array — the single definition of the
+    paper's tail metric, shared by the full and metrics-only sweep paths.
+
+    An empty instance (M == 0) has no CCT distribution; report 0.0 rather
+    than letting ``np.quantile`` raise on an empty array.
+    """
+    if ccts.size == 0:
+        return 0.0
+    return float(np.quantile(ccts, q))
+
+
 def tail_cct(s: Schedule, q: float) -> float:
     """p-quantile of per-coflow CCTs (e.g. q=0.95 / 0.99 for the paper's tails)."""
-    return float(np.quantile(s.ccts, q))
+    return tail_quantile(s.ccts, q)

@@ -67,14 +67,17 @@ def validate(s: Schedule, releases: np.ndarray | None = None) -> None:
                         )
 
     # --- 3. demand conservation -------------------------------------------
-    sent = np.zeros((inst.M, inst.N, inst.N))
-    for f in s.flows:
-        orig = int(s.pi[f.coflow])
-        sent[orig, f.i, f.j] += f.size
-    want = np.stack([c.demand for c in inst.coflows])
-    if not np.allclose(sent, want, atol=1e-6, rtol=1e-9):
-        bad = np.argwhere(~np.isclose(sent, want, atol=1e-6, rtol=1e-9))
-        raise AssertionError(f"demand conservation violated at (m,i,j)={bad[:5]}")
+    # (skipped for an empty instance: there is nothing to conserve, and
+    # np.stack of zero demand matrices would raise.)
+    if inst.M:
+        sent = np.zeros((inst.M, inst.N, inst.N))
+        for f in s.flows:
+            orig = int(s.pi[f.coflow])
+            sent[orig, f.i, f.j] += f.size
+        want = np.stack([c.demand for c in inst.coflows])
+        if not np.allclose(sent, want, atol=1e-6, rtol=1e-9):
+            bad = np.argwhere(~np.isclose(sent, want, atol=1e-6, rtol=1e-9))
+            raise AssertionError(f"demand conservation violated at (m,i,j)={bad[:5]}")
 
     # --- 4. CCT consistency -----------------------------------------------
     ccts = np.zeros(inst.M)

@@ -29,6 +29,18 @@ def gamma_w(weights: np.ndarray) -> float:
     return float(len(w) * (w**2).sum() / (w.sum() ** 2))
 
 
+def _require_assignment(s: Schedule):
+    """Lemmas 2/3 charge prefix traffic per core, which needs the per-coflow
+    AssignedFlow lists. The flat engine path (``engine.run_fast``) does not
+    materialize them — fail with directions rather than an AttributeError."""
+    if s.assignment is None:
+        raise ValueError(
+            "this certificate needs Schedule.assignment, which the flat "
+            "engine path does not materialize; build the schedule via "
+            "scheduler.run or engine.schedule_all_cores instead")
+    return s.assignment
+
+
 def check_lemma1(s: Schedule) -> dict:
     """T_m >= T_LB(D_m) = delta + rho_m / R for every coflow (any feasible schedule)."""
     inst = s.inst
@@ -54,7 +66,7 @@ def check_lemma2(s: Schedule) -> dict:
     Only guaranteed for the paper's tau-aware assignment (greedy argmin on
     T_LB^k), i.e. algorithms 'ours' and 'sunflow-core'.
     """
-    inst, pi, a = s.inst, s.pi, s.assignment
+    inst, pi, a = s.inst, s.pi, _require_assignment(s)
     out = []
     prefix = np.zeros((inst.K, inst.N, inst.N))
     agg = np.zeros((inst.N, inst.N))
@@ -89,7 +101,7 @@ def check_lemma3(s: Schedule, *, strict: bool = True) -> dict:
     the lemma; both are ~2x worse in weighted CCT. ``strict=False`` returns
     violations instead of raising.
     """
-    inst, pi, a = s.inst, s.pi, s.assignment
+    inst, pi, a = s.inst, s.pi, _require_assignment(s)
     # completion per coflow position
     t_pos = np.zeros(inst.M)
     for f in s.flows:

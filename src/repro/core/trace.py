@@ -44,8 +44,11 @@ def synth_fb_trace(n_coflows: int = 526, seed: int = 2026) -> list[TraceCoflow]:
     Mixture calibrated to the published shape of the benchmark: ~60% of
     coflows are narrow (<= 4x4) with MB-scale reducers, ~30% medium, ~10%
     wide (up to full 150 racks) with GB-scale reducers carrying most bytes.
-    Arrivals follow a Poisson process over one hour (unused by the paper's
-    simultaneous-release experiments but kept for trace fidelity).
+    Arrival times are sorted uniforms over one hour — i.e. Poisson-process
+    arrival times conditioned on the total count ``n_coflows`` (the order
+    statistics of a homogeneous Poisson process on an interval are uniform),
+    not an unconditional Poisson draw of the count itself. They are unused by
+    the paper's simultaneous-release experiments but kept for trace fidelity.
     """
     rng = np.random.default_rng(seed)
     arrivals = np.sort(rng.uniform(0, 3_600_000, n_coflows))

@@ -48,7 +48,15 @@ def flash_attention(q, k, v, *, causal=True, window=None, softmax_scale=None,
 
 
 def coflow_assign(fi, fj, sizes, rates, delta, *, n_ports, block_f=256):
-    """Tau-aware greedy assignment; returns per-flow core choices (F,) int32."""
+    """Tau-aware greedy assignment; returns per-flow core choices (F,) int32.
+
+    Production entry point of the assignment kernel: this is what
+    ``core.engine`` dispatches to for ``backend="pallas"`` (flat flow arrays
+    from ``coflow.extract_flows``, any integer/float dtype — cast to the
+    kernel's int32/fp32 here). Inherits the fp32 precision contract of
+    ``coflow_assign_fwd``: choices can diverge from the fp64 oracles on
+    near-tie flows at large F; use the numpy backend for bit-reproducibility.
+    """
     return coflow_assign_fwd(
         jnp.asarray(fi, jnp.int32), jnp.asarray(fj, jnp.int32),
         jnp.asarray(sizes, jnp.float32), jnp.asarray(rates, jnp.float32),

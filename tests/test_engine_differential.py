@@ -114,11 +114,32 @@ def test_engine_rejects_unknown_inputs():
     inst = _random_instance(0)
     with pytest.raises(ValueError, match="unknown algorithm"):
         run_fast(inst, "nope")
+    with pytest.raises(ValueError, match="unknown backend"):
+        run_fast(inst, "ours", backend="nope")
     from repro.core import assign_tau_aware, order_coflows
     pi = order_coflows(inst)
     a = assign_tau_aware(inst, pi)
     with pytest.raises(ValueError, match="unknown scheduling"):
         schedule_all_cores(inst, pi, a, "nope")
+
+
+def test_run_fast_flat_path_matches_schedule_all_cores():
+    """The flat production path must stay flow-for-flow identical to the
+    object front-end (``schedule_all_cores`` on the dataclass assignment) —
+    run_fast no longer builds that assignment, so this pins the refactor."""
+    from repro.core import assign_tau_aware, order_coflows
+
+    for trial in (2, 7, 11):
+        inst = _random_instance(trial)
+        pi = order_coflows(inst)
+        a = assign_tau_aware(inst, pi)
+        via_objects = schedule_all_cores(inst, pi, a, "work-conserving")
+        flat = run_fast(inst, "ours")
+        assert flat.assignment is None  # no dataclass materialization
+        assert via_objects.assignment is a
+        np.testing.assert_array_equal(flat.ccts, via_objects.ccts)
+        for f, g in zip(flat.flows, via_objects.flows):
+            assert f == g
 
 
 # --------------------------------------------------------------- run_batch
