@@ -1,0 +1,198 @@
+"""Fabric-manager service load harness: streaming admission throughput.
+
+Open-loop arrival streams (trace-derived demand + arrival structure) are
+driven into the fabric-manager service at increasing arrival rates (the
+arrival span shrinks relative to the offline makespan, so the backlog
+deepens). For each rate the harness reports, for the incremental path
+(``service.FabricManager`` over ``engine.FabricState``):
+
+  - sustained admission throughput (finalized coflows / total tick wall),
+  - p50/p99 decision latency (request submission -> CCT final),
+  - peak/mean queue depth and flow backlog,
+  - and the speedup over the NAIVE fabric manager, which re-runs a full
+    ``run_fast_online`` replay of the whole admitted history every tick —
+    the only correct alternative to incremental state, and exactly what the
+    incremental commit rule avoids.
+
+Every per-tick circuit program is validated by the independent referee
+(outside the timed region), and the incremental stream's final CCTs are
+asserted equal to the naive replay's — the speedup is measured between two
+paths producing bit-identical schedules.
+
+Acceptance floor (checked in ``main``): at N=32 with >= 500 streamed
+coflows, incremental sustains >= 5x the naive replay throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    row_from_ccts,
+    run_fast_online,
+    sample_online_instance,
+    synth_fb_trace,
+)
+from repro.core.coflow import Instance, OnlineInstance
+from repro.service import FabricConfig, FabricManager
+
+RATES = (10.0, 20.0, 30.0)
+DELTA = 8.0
+
+
+def _tick_times(oinst: OnlineInstance, n_ticks: int) -> np.ndarray:
+    hi = float(oinst.releases.max())
+    if hi <= 0:
+        return np.zeros(1)
+    return np.linspace(hi / n_ticks, hi, n_ticks)
+
+
+def run_incremental(oinst: OnlineInstance, n_ticks: int,
+                    validate: bool = True) -> dict:
+    """Stream the instance through the service; returns summary + wall."""
+    inst = oinst.inst
+    mgr = FabricManager(FabricConfig(
+        rates=tuple(inst.rates), delta=inst.delta, N=inst.N,
+        max_queue_depth=max(64, inst.M)))
+    order = np.argsort(oinst.releases, kind="stable")
+    rel = oinst.releases
+    nxt = 0
+    t_wall = 0.0
+    for T in _tick_times(oinst, n_ticks):
+        t0 = time.perf_counter()
+        while nxt < order.size and rel[order[nxt]] <= T:
+            m = int(order[nxt])
+            mgr.submit(inst.coflows[m], float(rel[m]))
+            nxt += 1
+        mgr.tick(float(T))
+        t_wall += time.perf_counter() - t0
+    t0 = time.perf_counter()
+    mgr.flush()
+    t_wall += time.perf_counter() - t0
+    if validate:
+        for r in mgr.reports:
+            r.program.validate()
+    out = mgr.summary()
+    out["wall_s"] = t_wall
+    out["pending_max"] = max(r.pending_flows for r in mgr.reports)
+    # stream identity order == instance order (releases enter sorted), so
+    # ccts() aligns with a run_fast_online replay over the sorted stream
+    out["_ccts"] = mgr.ccts()[np.argsort(order, kind="stable")]
+    return out
+
+
+def run_naive(oinst: OnlineInstance, n_ticks: int) -> dict:
+    """Per-tick FULL replay of the admitted history (the baseline)."""
+    inst = oinst.inst
+    rel = oinst.releases
+    t_wall = 0.0
+    ccts = None
+    ticks = list(_tick_times(oinst, n_ticks)) + [np.inf]
+    for T in ticks:
+        ids = np.nonzero(rel <= T)[0]
+        if ids.size == 0:
+            continue
+        sub = OnlineInstance(
+            inst=Instance(coflows=tuple(inst.coflows[int(m)] for m in ids),
+                          rates=inst.rates, delta=inst.delta),
+            releases=rel[ids])
+        t0 = time.perf_counter()
+        s = run_fast_online(sub, "ours")
+        t_wall += time.perf_counter() - t0
+        if ids.size == inst.M:
+            ccts = s.ccts
+    return {"wall_s": t_wall, "_ccts": ccts}
+
+
+def bench_cache(n_patterns: int = 6, n_requests: int = 60,
+                seed: int = 0) -> dict:
+    """Repeated demand patterns through the one-shot cached plane."""
+    trace = synth_fb_trace(526, seed=2026)
+    insts = [
+        sample_online_instance(trace, N=16, M=40, rates=RATES, delta=DELTA,
+                               span=0.0, seed=seed + p).inst
+        for p in range(n_patterns)
+    ]
+    mgr = FabricManager(FabricConfig(rates=RATES, delta=DELTA, N=16))
+    rng = np.random.default_rng(seed)
+    t_miss = t_hit = 0.0
+    for p in rng.integers(0, n_patterns, size=n_requests):
+        t0 = time.perf_counter()
+        _prog, hit = mgr.schedule_instance(insts[int(p)])
+        dt = time.perf_counter() - t0
+        if hit:
+            t_hit += dt
+        else:
+            t_miss += dt
+    return {
+        "requests": n_requests,
+        "patterns": n_patterns,
+        "hit_rate": mgr.cache.hit_rate,
+        "miss_wall_s": t_miss,
+        "hit_wall_s": t_hit,
+    }
+
+
+def main(N: int = 32, M: int = 500, n_ticks: int = 16,
+         spans: tuple = (2.0, 1.0, 0.5), seed: int = 0,
+         check_floor: bool = True) -> dict:
+    trace = synth_fb_trace(526, seed=2026)
+    print("== Fabric-manager service: streaming admission throughput ==")
+    off = sample_online_instance(trace, N=N, M=M, rates=RATES, delta=DELTA,
+                                 span=0.0, seed=seed)
+    mk = float(run_fast_online(off, "ours").ccts.max())
+    print(f"workload: N={N} M={M} trace stream, offline makespan {mk:.0f}, "
+          f"{n_ticks} service ticks")
+    print(f"{'span/mk':>8s} {'cf/s':>8s} {'p50 ms':>8s} {'p99 ms':>8s} "
+          f"{'backlog':>8s} {'inc s':>7s} {'naive s':>8s} {'speedup':>8s}")
+    rows = []
+    for idx, factor in enumerate(spans):
+        oi = sample_online_instance(trace, N=N, M=M, rates=RATES, delta=DELTA,
+                                    span=mk * factor, seed=seed)
+        inc = run_incremental(oi, n_ticks)
+        nav = run_naive(oi, n_ticks)
+        inc_ccts = inc.pop("_ccts")
+        nav_ccts = nav.pop("_ccts")
+        assert nav_ccts is not None and np.array_equal(
+            np.sort(inc_ccts), np.sort(nav_ccts)), \
+            "incremental/naive CCT divergence"
+        speedup = nav["wall_s"] / max(inc["wall_s"], 1e-12)
+        # stream CCT metrics through the sweep-row schema (instance = the
+        # span-factor index of this open-loop run)
+        cct = row_from_ccts(idx, "ours", "work-conserving", seed,
+                            oi.inst.weights, inc_ccts,
+                            inc["flows_committed"], inc["wall_s"])
+        row = {
+            "span_factor": factor,
+            "coflows_per_s": M / inc["wall_s"],
+            "p50_ms": inc["decision_latency_p50_s"] * 1e3,
+            "p99_ms": inc["decision_latency_p99_s"] * 1e3,
+            "backlog_max_flows": inc["pending_max"],
+            "incremental_s": inc["wall_s"],
+            "naive_s": nav["wall_s"],
+            "speedup": speedup,
+            "cct": cct.as_dict(),
+        }
+        rows.append(row)
+        print(f"{factor:8.1f} {row['coflows_per_s']:8.0f} "
+              f"{row['p50_ms']:8.1f} {row['p99_ms']:8.1f} "
+              f"{row['backlog_max_flows']:8d} {row['incremental_s']:7.2f} "
+              f"{row['naive_s']:8.2f} {speedup:7.1f}x")
+    best = max(r["speedup"] for r in rows)
+    print(f"best incremental-vs-naive speedup: {best:.1f}x "
+          f"(floor: 5x at N=32, M>=500)")
+    if check_floor and N >= 32 and M >= 500:
+        assert best >= 5.0, f"service speedup floor missed: {best:.1f}x < 5x"
+
+    cache = bench_cache()
+    print(f"one-shot cache: {cache['requests']} requests over "
+          f"{cache['patterns']} patterns -> hit rate {cache['hit_rate']:.2f}, "
+          f"miss wall {cache['miss_wall_s']:.2f}s vs hit wall "
+          f"{cache['hit_wall_s']:.4f}s")
+    return {"N": N, "M": M, "n_ticks": n_ticks, "offline_makespan": mk,
+            "rows": rows, "best_speedup": best, "cache": cache}
+
+
+if __name__ == "__main__":
+    main()

@@ -4,8 +4,15 @@ All settings run through the batched sweep engine (``repro.core.run_batch``),
 so a whole (instances x algorithms) grid is scheduled by the vectorized
 engine — optionally across worker processes — and every schedule passes the
 independent feasibility validator before its metrics are aggregated.
+
+``emit_json`` writes each section's machine-readable ``BENCH_<name>.json``
+artifact (setting, wall-clock, returned metrics) so the perf trajectory is
+diffable across PRs; ``benchmarks.run`` wraps every section with it.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
@@ -26,6 +33,41 @@ def trace():
     if _TRACE is None:
         _TRACE = synth_fb_trace(526, seed=2026)
     return _TRACE
+
+
+def _jsonable(x):
+    """Recursively coerce numpy scalars/arrays and dataclass-ish payloads."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return [_jsonable(v) for v in x.tolist()]
+    if isinstance(x, (np.floating, np.integer, np.bool_)):
+        x = x.item()
+    if isinstance(x, float) and not np.isfinite(x):
+        return repr(x)  # json has no inf/nan
+    return x
+
+
+def emit_json(name: str, payload, wall_s: float, out_dir: str | None = None,
+              **meta) -> str:
+    """Write ``BENCH_<name>.json`` with a section's metrics; returns the path.
+
+    ``payload`` is whatever the section's ``main`` returned (rows, dicts of
+    CCT ratios, speedups); ``meta`` records the setting knobs. Artifacts go
+    to ``out_dir`` (default: ``$BENCH_OUT`` or ``benchmarks/out``).
+    """
+    if out_dir is None:
+        out_dir = os.environ.get(
+            "BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    doc = {"name": name, "wall_s": round(float(wall_s), 3),
+           "setting": _jsonable(meta), "data": _jsonable(payload)}
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+    return path
 
 
 def run_setting(*, N=16, M=100, rates=(10, 20, 30), delta=8.0, seeds=(0, 1, 2),

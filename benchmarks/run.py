@@ -4,13 +4,30 @@ framework-level reports.
   python -m benchmarks.run [--full]
 
 Default mode keeps wall time modest (fewer seeds / subsets); --full runs the
-paper's complete grids.
+paper's complete grids. Every section additionally emits a machine-readable
+``BENCH_<name>.json`` artifact (setting, wall-clock, returned metrics) under
+``--out`` (default ``benchmarks/out``, override with $BENCH_OUT) so the
+performance trajectory is diffable across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+
+def _section(name: str, fn, /, **kw) -> None:
+    """Run one benchmark section and emit its JSON artifact."""
+    from benchmarks import common
+
+    print("#" * 72)
+    t0 = time.time()
+    payload = fn(**kw)
+    wall = time.time() - t0
+    path = common.emit_json(name, payload, wall, **{
+        k: v for k, v in kw.items() if isinstance(v, (int, float, str, tuple))
+    })
+    print(f"[{name}] artifact: {path}")
 
 
 def main(argv=None) -> int:
@@ -21,12 +38,16 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=None,
                     help="run_batch worker processes for the paper sweeps "
                          "(default: auto; 0 = in-process serial)")
+    ap.add_argument("--out", type=str, default=None,
+                    help="directory for BENCH_<name>.json artifacts "
+                         "(default: $BENCH_OUT or benchmarks/out)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
     from benchmarks import (
         bench_assignment,
         bench_core_scaling,
+        bench_service,
         comm_planner,
         common,
         online_arrivals,
@@ -39,34 +60,34 @@ def main(argv=None) -> int:
     )
 
     common.DEFAULT_WORKERS = args.workers
+    if args.out is not None:
+        import os
+        os.environ["BENCH_OUT"] = args.out
 
-    print("#" * 72)
-    paper_fig4_ablation.main(seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2))
-    print("#" * 72)
-    paper_delta_sensitivity.main(
-        deltas=(2, 4, 6, 8, 10, 12) if args.full else (2, 8, 12),
-        seeds=(0, 1, 2) if args.full else (0, 1))
-    print("#" * 72)
-    paper_n_scaling.main(ns=(8, 12, 16, 24, 32) if args.full else (8, 16, 32),
-                         seeds=(0, 1, 2) if args.full else (0, 1))
-    print("#" * 72)
-    paper_m_scaling.main(ms=(50, 100, 150, 200, 250) if args.full
-                         else (50, 100, 250),
-                         seeds=(0, 1) if args.full else (0,))
-    print("#" * 72)
-    paper_gamma_w.main(seeds=(0, 1) if args.full else (0,))
-    print("#" * 72)
-    online_arrivals.main(seeds=(0, 1) if args.full else (0,))
-    print("#" * 72)
-    bench_core_scaling.main(workers=args.workers)
-    print("#" * 72)
-    bench_assignment.main(workers=args.workers)
-    print("#" * 72)
-    roofline_report.main()
+    _section("fig4_ablation", paper_fig4_ablation.main,
+             seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2))
+    _section("delta_sensitivity", paper_delta_sensitivity.main,
+             deltas=(2, 4, 6, 8, 10, 12) if args.full else (2, 8, 12),
+             seeds=(0, 1, 2) if args.full else (0, 1))
+    _section("n_scaling", paper_n_scaling.main,
+             ns=(8, 12, 16, 24, 32) if args.full else (8, 16, 32),
+             seeds=(0, 1, 2) if args.full else (0, 1))
+    _section("m_scaling", paper_m_scaling.main,
+             ms=(50, 100, 150, 200, 250) if args.full else (50, 100, 250),
+             seeds=(0, 1) if args.full else (0,))
+    _section("gamma_w", paper_gamma_w.main,
+             seeds=(0, 1) if args.full else (0,))
+    _section("online_arrivals", online_arrivals.main,
+             seeds=(0, 1) if args.full else (0,))
+    _section("core_scaling", bench_core_scaling.main, workers=args.workers)
+    _section("assignment", bench_assignment.main, workers=args.workers)
+    _section("service", bench_service.main,
+             n_ticks=24 if args.full else 16)
+    _section("roofline", roofline_report.main)
     if not args.skip_comm:
         print("#" * 72)
         try:
-            comm_planner.main()
+            _section("comm_planner", comm_planner.main)
         except Exception as e:  # the compile is heavy; report, don't die
             print(f"[comm_planner] skipped: {e}")
     print("#" * 72)

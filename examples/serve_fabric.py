@@ -1,0 +1,62 @@
+"""Fabric-manager service demo: stream trace-derived coflow arrivals through
+the admission queue, schedule them incrementally against committed circuits,
+and emit validated per-tick circuit programs.
+
+  PYTHONPATH=src python examples/serve_fabric.py
+
+Pure control-plane numpy — no accelerator needed. The same loop at load is
+``benchmarks/bench_service.py``; the one-shot cached plane is what
+``repro.comm.planner.plan_circuits_service`` uses to replan a training
+step's collectives every iteration for free.
+"""
+import numpy as np
+
+from repro.core import (
+    arrival_stream,
+    run_fast_online,
+    sample_online_instance,
+    synth_fb_trace,
+)
+from repro.service import FabricConfig, FabricManager
+
+N, M, TICKS = 16, 80, 12
+RATES, DELTA = (10.0, 20.0, 30.0), 8.0
+
+trace = synth_fb_trace(526, seed=2026)
+offline = sample_online_instance(trace, N=N, M=M, rates=RATES, delta=DELTA,
+                                 span=0.0, seed=7)
+makespan = float(run_fast_online(offline, "ours").ccts.max())
+oinst = sample_online_instance(trace, N=N, M=M, rates=RATES, delta=DELTA,
+                               span=makespan, seed=7)
+
+mgr = FabricManager(FabricConfig(rates=RATES, delta=DELTA, N=N,
+                                 validate_every_tick=True))
+arrivals = list(arrival_stream(oinst))
+nxt = 0
+print(f"serving N={N} M={M} stream over {TICKS} ticks "
+      f"(arrival span = offline makespan = {makespan:.0f})")
+for T in np.linspace(makespan / TICKS, makespan, TICKS):
+    while nxt < len(arrivals) and arrivals[nxt][1] <= T:
+        mgr.submit(*arrivals[nxt])
+        nxt += 1
+    rep = mgr.tick(float(T))
+    print(f"  t={rep.t_now:7.1f}  admitted {rep.admitted:3d}  "
+          f"committed {rep.committed_flows:5d} circuits  "
+          f"finalized {rep.finalized:3d}  backlog {rep.pending_flows:5d}")
+rep = mgr.flush()
+print(f"  flush     committed {rep.committed_flows:5d} circuits  "
+      f"finalized {rep.finalized:3d}")
+
+program = mgr.program()
+program.validate()
+summary = mgr.summary()
+print(f"\nmerged program: {program.n_segments} circuit segments, "
+      f"makespan {program.makespan:.1f} (validated)")
+print(f"decision latency p50/p99: {summary['decision_latency_p50_s']*1e3:.1f}/"
+      f"{summary['decision_latency_p99_s']*1e3:.1f} ms; "
+      f"throughput {summary['coflows_per_s']:.0f} coflows/s")
+events = list(program.events())
+print("first switch actions:")
+for ev in events[:6]:
+    print(f"  t={ev.t:8.2f} core {ev.core}  {ev.kind:9s} "
+          f"{ev.ingress:2d} -> {ev.egress:2d}  (coflow {ev.cid})")

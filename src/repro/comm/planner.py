@@ -25,7 +25,7 @@ from repro.core import (
 )
 from repro.core.coflow import Coflow
 
-__all__ = ["OCSFabric", "PlanReport", "plan_circuits"]
+__all__ = ["OCSFabric", "PlanReport", "plan_circuits", "plan_circuits_service"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,11 +50,14 @@ class PlanReport:
     p95: float
     p99: float
     ideal_lb_sum: float  # sum of per-coflow wire-speed lower bounds
-    schedule: Schedule
+    schedule: Schedule | None
+    program: object | None = None  # service.CircuitProgram (service path)
+    cached: bool = False           # program came from the service cache
 
     def row(self) -> dict:
         d = dataclasses.asdict(self)
         d.pop("schedule")
+        d.pop("program")
         return d
 
 
@@ -83,3 +86,60 @@ def plan_circuits(
             schedule=s,
         )
     return out
+
+
+def plan_circuits_service(
+    coflows: list[Coflow],
+    fabric: OCSFabric = OCSFabric(),
+    algorithms: tuple = ALGORITHMS,
+    *,
+    seed: int = 0,
+    manager=None,
+):
+    """Plan a step's circuits through the fabric-manager service.
+
+    Same report as :func:`plan_circuits` but routed through
+    ``service.FabricManager.schedule_instance`` — the engine fast path
+    fronted by the canonical-hash program cache, which is the production
+    shape: a training job replans the *same* collective phases every step,
+    so all steps after the first are cache hits and never touch the engine.
+    Pass a shared ``manager`` to keep the cache warm across steps; each
+    emitted program is validated by the independent referee. Returns
+    ``(reports, manager)``.
+    """
+    from repro.service import FabricConfig, FabricManager
+
+    inst = Instance(coflows=tuple(coflows),
+                    rates=np.asarray(fabric.rates), delta=fabric.delta)
+    if manager is None:
+        manager = FabricManager(FabricConfig(
+            rates=tuple(fabric.rates), delta=fabric.delta, N=inst.N))
+    lbs = [global_lb(c.demand, inst.R, inst.delta) for c in coflows]
+    out: dict[str, PlanReport] = {}
+    for alg in algorithms:
+        program, cached = manager.schedule_instance(inst, algorithm=alg,
+                                                    seed=seed)
+        program.validate()
+        s = program.as_schedule()
+        # The program's reconstructed instance is keyed/ordered by cid and
+        # omits zero-demand coflows; recover the submitted weights through
+        # the cid labels and pad the omitted coflows' 0.0 CCTs back in so
+        # the quantiles match plan_circuits over the full M.
+        w_of = {c.cid: c.weight for c in coflows}
+        pad = len(coflows) - s.inst.M
+        weights = np.array([w_of[c.cid] for c in s.inst.coflows]
+                           + [1.0] * pad)
+        ccts = np.concatenate([s.ccts, np.zeros(pad)])
+        out[alg] = PlanReport(
+            algorithm=alg,
+            total_cct=float(ccts.sum()),
+            weighted_cct=float((weights * ccts).sum()) if ccts.size else 0.0,
+            makespan=float(ccts.max()) if ccts.size else 0.0,
+            p95=float(np.quantile(ccts, 0.95)) if ccts.size else 0.0,
+            p99=float(np.quantile(ccts, 0.99)) if ccts.size else 0.0,
+            ideal_lb_sum=float(np.sum(lbs)),
+            schedule=None,
+            program=program,
+            cached=cached,
+        )
+    return out, manager

@@ -3,13 +3,17 @@ networks under the not-all-stop reconfiguration model (Algorithm 1), with its
 lower bounds, ablation baselines, feasibility validator, theory certificates,
 and trace-driven workload generation.
 """
-from .batch import ResultTable, SweepRow, run_batch  # noqa: F401
+from .batch import ResultTable, SweepRow, row_from_ccts, run_batch  # noqa: F401
 from .engine import (  # noqa: F401
     BACKENDS,
+    INCREMENTAL_SCHEDULINGS,
     SCHEDULINGS,
+    FabricState,
     FlowTable,
+    TickCommit,
     build_flow_table,
     cross_check,
+    cross_check_incremental,
     cross_check_online,
     run_fast,
     run_fast_metrics,
@@ -20,6 +24,7 @@ from .online import OnlineInstance, run_online  # noqa: F401
 from .assignment import (  # noqa: F401
     AssignedFlow,
     Assignment,
+    FlatAssignState,
     assign_fast,
     assign_random,
     assign_rho_only,
@@ -53,4 +58,10 @@ from .theory import (  # noqa: F401
     check_theorem2,
     gamma_w,
 )
-from .trace import load_fb_trace, sample_instance, synth_fb_trace  # noqa: F401
+from .trace import (  # noqa: F401
+    arrival_stream,
+    load_fb_trace,
+    sample_instance,
+    sample_online_instance,
+    synth_fb_trace,
+)

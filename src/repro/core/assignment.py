@@ -26,6 +26,7 @@ __all__ = [
     "assign_rho_only",
     "assign_random",
     "ASSIGN_POLICIES",
+    "FlatAssignState",
     "assign_fast",
     "assignment_from_choices",
 ]
@@ -152,105 +153,166 @@ def assign_random(inst: Instance, pi: np.ndarray, *, seed: int = 0) -> Assignmen
 ASSIGN_POLICIES = ("tau-aware", "rho-only", "random")
 
 
-def _flat_tau_aware(fi, fj, sizes, rates, delta: float, n_ports: int) -> np.ndarray:
-    """Flat greedy tau-aware choices; mirrors CoreState candidate/assign.
+class FlatAssignState:
+    """Persistent flat assignment-phase state for streaming (incremental) use.
 
-    Per-core state lives in plain Python lists (K is small, single digits):
-    a scalar inner loop over cores beats (K,)-vectorized numpy by ~10x at
-    this size because it never allocates temporaries — this is what closes
-    the per-flow Python-object hot loop on the numpy backend.
+    Holds exactly the per-core structures the one-shot flat policies build
+    internally, so a stream of arrival batches fed through :meth:`assign`
+    chunk by chunk produces choices bit-identical to one ``assign_fast`` call
+    over the concatenated flow arrays:
+
+      - ``tau-aware`` / ``rho-only``: the scalar per-flow loop is sequential,
+        so splitting it at arbitrary chunk boundaries is a no-op;
+      - ``random``: ``Generator.choice(size=n)`` with a probability vector
+        consumes exactly ``n`` doubles from the PCG64 stream, so chunked
+        draws concatenate to the one-shot draw (asserted in tests).
+
+    This is what lets the fabric-manager service commit assignments at
+    arrival (irrevocably, as the online model requires) without replaying
+    the whole history each tick.
     """
-    K = len(rates)
-    choices = np.empty(fi.size, dtype=np.int64)
-    # per core: (row_load, col_load, row_tau, col_tau, nz bitmap, rate)
-    cores = [
-        ([0.0] * n_ports, [0.0] * n_ports, [0] * n_ports, [0] * n_ports,
-         bytearray(n_ports * n_ports), float(rates[k]))
-        for k in range(K)
-    ]
-    bound = [0.0] * K
-    inf = float("inf")
-    t = 0
-    for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
-        ij = i * n_ports + j
-        best = inf
-        kb = 0
-        k = 0
-        for rl, cl, rt, ct, nzk, rk in cores:
-            new = 0 if nzk[ij] else 1
-            li = (rl[i] + d) / rk + (rt[i] + new) * delta
-            lj = (cl[j] + d) / rk + (ct[j] + new) * delta
-            b = bound[k]
+
+    def __init__(self, policy: str, rates, delta: float, n_ports: int, *,
+                 seed: int = 0):
+        if policy not in ASSIGN_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; one of {ASSIGN_POLICIES}")
+        rates = np.asarray(rates, dtype=np.float64)
+        self.policy = policy
+        self.rates = rates
+        self.delta = float(delta)
+        self.n_ports = int(n_ports)
+        self.n_assigned = 0
+        K = rates.shape[0]
+        if policy == "tau-aware":
+            # per core: (row_load, col_load, row_tau, col_tau, nz bitmap, rate)
+            self._cores = [
+                ([0.0] * n_ports, [0.0] * n_ports, [0] * n_ports,
+                 [0] * n_ports, bytearray(n_ports * n_ports), float(rates[k]))
+                for k in range(K)
+            ]
+            self._bound = [0.0] * K
+        elif policy == "rho-only":
+            self._cores = [([0.0] * n_ports, [0.0] * n_ports, float(rates[k]))
+                           for k in range(K)]
+            self._rho = [0.0] * K  # running max port load per core
+        else:  # random
+            self._rng = np.random.default_rng(seed)
+            self._p = rates / rates.sum()
+
+    def assign(self, fi: np.ndarray, fj: np.ndarray,
+               sizes: np.ndarray) -> np.ndarray:
+        """Assign one chunk of flows (in global arrival order), mutating the
+        persistent state; returns the ``(len(fi),)`` int64 core choices."""
+        self.n_assigned += int(fi.size)
+        if self.policy == "tau-aware":
+            return self._assign_tau_aware(fi, fj, sizes)
+        if self.policy == "rho-only":
+            return self._assign_rho_only(fi, fj, sizes)
+        K = self.rates.shape[0]
+        return self._rng.choice(K, size=fi.size, p=self._p).astype(np.int64)
+
+    def _assign_tau_aware(self, fi, fj, sizes) -> np.ndarray:
+        """Flat greedy tau-aware choices; mirrors CoreState candidate/assign.
+
+        Per-core state lives in plain Python lists (K is small, single
+        digits): a scalar inner loop over cores beats (K,)-vectorized numpy
+        by ~10x at this size because it never allocates temporaries — this
+        is what closes the per-flow Python-object hot loop on the numpy
+        backend.
+        """
+        cores, bound, delta = self._cores, self._bound, self.delta
+        n_ports = self.n_ports
+        choices = np.empty(fi.size, dtype=np.int64)
+        inf = float("inf")
+        t = 0
+        for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
+            ij = i * n_ports + j
+            best = inf
+            kb = 0
+            k = 0
+            for rl, cl, rt, ct, nzk, rk in cores:
+                new = 0 if nzk[ij] else 1
+                li = (rl[i] + d) / rk + (rt[i] + new) * delta
+                lj = (cl[j] + d) / rk + (ct[j] + new) * delta
+                b = bound[k]
+                if li > b:
+                    b = li
+                if lj > b:
+                    b = lj
+                if b < best:  # strict: argmin ties -> lowest core index
+                    best = b
+                    kb = k
+                k += 1
+            rl, cl, rt, ct, nzk, rk = cores[kb]
+            if not nzk[ij]:
+                nzk[ij] = 1
+                rt[i] += 1
+                ct[j] += 1
+            rl[i] = rli = rl[i] + d
+            cl[j] = clj = cl[j] + d
+            li = rli / rk + rt[i] * delta
+            lj = clj / rk + ct[j] * delta
+            b = bound[kb]
             if li > b:
                 b = li
             if lj > b:
                 b = lj
-            if b < best:  # strict: argmin ties -> lowest core index
-                best = b
-                kb = k
-            k += 1
-        rl, cl, rt, ct, nzk, rk = cores[kb]
-        if not nzk[ij]:
-            nzk[ij] = 1
-            rt[i] += 1
-            ct[j] += 1
-        rl[i] = rli = rl[i] + d
-        cl[j] = clj = cl[j] + d
-        li = rli / rk + rt[i] * delta
-        lj = clj / rk + ct[j] * delta
-        b = bound[kb]
-        if li > b:
-            b = li
-        if lj > b:
-            b = lj
-        bound[kb] = b
-        choices[t] = kb
-        t += 1
-    return choices
+            bound[kb] = b
+            choices[t] = kb
+            t += 1
+        return choices
+
+    def _assign_rho_only(self, fi, fj, sizes) -> np.ndarray:
+        """Flat RHO-ASSIGN choices; mirrors CoreState.candidate_rho_bounds.
+
+        The oracle recomputes ``rho^k_{1:m}`` from scratch per flow (an
+        O(K*N) scan); loads only grow, so a running per-core max is exactly
+        equal (max is a selection, no rounding) and O(1) per flow.
+        """
+        cores, cur_rho = self._cores, self._rho
+        choices = np.empty(fi.size, dtype=np.int64)
+        inf = float("inf")
+        t = 0
+        for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
+            best = inf
+            kb = 0
+            k = 0
+            for rl, cl, rk in cores:
+                li = rl[i] + d
+                lj = cl[j] + d
+                c = cur_rho[k]
+                if li > c:
+                    c = li
+                if lj > c:
+                    c = lj
+                c = c / rk
+                if c < best:
+                    best = c
+                    kb = k
+                k += 1
+            rl, cl, _rk = cores[kb]
+            rl[i] = rli = rl[i] + d
+            cl[j] = clj = cl[j] + d
+            c = cur_rho[kb]
+            if rli > c:
+                c = rli
+            if clj > c:
+                c = clj
+            cur_rho[kb] = c
+            choices[t] = kb
+            t += 1
+        return choices
+
+
+def _flat_tau_aware(fi, fj, sizes, rates, delta: float, n_ports: int) -> np.ndarray:
+    """One-shot tau-aware choices (a fresh ``FlatAssignState`` per call)."""
+    return FlatAssignState("tau-aware", rates, delta, n_ports).assign(fi, fj, sizes)
 
 
 def _flat_rho_only(fi, fj, sizes, rates, n_ports: int) -> np.ndarray:
-    """Flat RHO-ASSIGN choices; mirrors CoreState.candidate_rho_bounds.
-
-    The oracle recomputes ``rho^k_{1:m}`` from scratch per flow (an O(K*N)
-    scan); loads only grow, so a running per-core max is exactly equal (max
-    is a selection, no rounding) and O(1) per flow.
-    """
-    K = len(rates)
-    choices = np.empty(fi.size, dtype=np.int64)
-    cores = [([0.0] * n_ports, [0.0] * n_ports, float(rates[k])) for k in range(K)]
-    cur_rho = [0.0] * K  # running max port load per core
-    inf = float("inf")
-    t = 0
-    for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
-        best = inf
-        kb = 0
-        k = 0
-        for rl, cl, rk in cores:
-            li = rl[i] + d
-            lj = cl[j] + d
-            c = cur_rho[k]
-            if li > c:
-                c = li
-            if lj > c:
-                c = lj
-            c = c / rk
-            if c < best:
-                best = c
-                kb = k
-            k += 1
-        rl, cl, _rk = cores[kb]
-        rl[i] = rli = rl[i] + d
-        cl[j] = clj = cl[j] + d
-        c = cur_rho[kb]
-        if rli > c:
-            c = rli
-        if clj > c:
-            c = clj
-        cur_rho[kb] = c
-        choices[t] = kb
-        t += 1
-    return choices
+    """One-shot RHO-ASSIGN choices (a fresh ``FlatAssignState`` per call)."""
+    return FlatAssignState("rho-only", rates, 0.0, n_ports).assign(fi, fj, sizes)
 
 
 def assign_fast(

@@ -30,7 +30,7 @@ import numpy as np
 from .coflow import Instance, OnlineInstance
 from .scheduler import ALGORITHMS, Schedule, tail_quantile
 
-__all__ = ["SweepRow", "ResultTable", "run_batch"]
+__all__ = ["SweepRow", "ResultTable", "run_batch", "row_from_ccts"]
 
 _SUNFLOW_ALGS = ("sunflow-core", "rand-sunflow")
 
@@ -138,8 +138,8 @@ def _run_one(payload) -> SweepRow:
         ccts, n_flows = run_fast_metrics(inst, alg, seed=seed, scheduling=sched,
                                          backend=backend, releases=rel)
         wall = time.perf_counter() - t0
-        return _row_from_ccts(idx, alg, sched, seed, inst.weights, ccts,
-                              n_flows, wall)
+        return row_from_ccts(idx, alg, sched, seed, inst.weights, ccts,
+                             n_flows, wall)
     t0 = time.perf_counter()
     if rel is None:
         s = run_fast(inst, alg, seed=seed, scheduling=sched, backend=backend)
@@ -161,13 +161,15 @@ def _run_one(payload) -> SweepRow:
     return _row_from_schedule(idx, alg, sched, seed, s, wall)
 
 
-def _row_from_ccts(idx: int, alg: str, sched: str, seed: int,
-                   weights: np.ndarray, ccts: np.ndarray, n_flows: int,
-                   wall: float) -> SweepRow:
+def row_from_ccts(idx: int, alg: str, sched: str, seed: int,
+                  weights: np.ndarray, ccts: np.ndarray, n_flows: int,
+                  wall: float) -> SweepRow:
     """SweepRow straight from flat per-coflow CCTs (metrics-only path).
 
     An empty instance (M == 0) yields an all-zero-metric row rather than
-    tripping ``np.quantile`` on an empty array.
+    tripping ``np.quantile`` on an empty array. Public because the fabric
+    service and its load harness report stream metrics through the same
+    schema (``instance`` then indexes the stream/tick, not a sweep grid).
     """
     return SweepRow(
         instance=idx,
@@ -186,8 +188,8 @@ def _row_from_ccts(idx: int, alg: str, sched: str, seed: int,
 
 def _row_from_schedule(idx: int, alg: str, sched: str, seed: int,
                        s: Schedule, wall: float) -> SweepRow:
-    return _row_from_ccts(idx, alg, sched, seed, s.inst.weights, s.ccts,
-                          len(s.flows), wall)
+    return row_from_ccts(idx, alg, sched, seed, s.inst.weights, s.ccts,
+                         len(s.flows), wall)
 
 
 def run_batch(

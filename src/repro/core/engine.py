@@ -47,7 +47,10 @@ from .scheduler import Schedule
 
 __all__ = [
     "FlowTable",
+    "FabricState",
+    "TickCommit",
     "SCHEDULINGS",
+    "INCREMENTAL_SCHEDULINGS",
     "BACKENDS",
     "build_flow_table",
     "schedule_all_cores",
@@ -56,6 +59,7 @@ __all__ = [
     "run_fast_metrics",
     "cross_check",
     "cross_check_online",
+    "cross_check_incremental",
 ]
 
 #: Intra-core policies understood by the engine. ``sunflow`` is the
@@ -207,6 +211,8 @@ def _event_loop(
     t0: float = 0.0,
     guard: bool = False,
     release: np.ndarray | None = None,
+    free_in0: np.ndarray | None = None,
+    free_out0: np.ndarray | None = None,
 ) -> np.ndarray:
     """Vectorized merged event loop; flows are in priority order per core.
 
@@ -233,21 +239,36 @@ def _event_loop(
     gathered from just-freed resources plus flows released exactly then. An
     unreleased flow never protects its ports under ``guard=True`` (the
     online scheduler cannot know flows that have not arrived).
+
+    ``free_in0``/``free_out0`` (per resource, both or neither) seed the port
+    availability horizons from circuits already *committed* by earlier
+    service ticks (see ``FabricState``): a resource is busy until its
+    horizon, and every horizon value strictly after ``t0`` is seeded into
+    the event heap so the loop wakes exactly when a committed circuit tears
+    down. With no horizons this is the original from-scratch loop.
     """
     F = rin.size
     t_est = np.full(F, -1.0)
     if F == 0:
         return t_est
-    free_in = np.full(n_res, t0)
-    free_out = np.full(n_res, t0)
+    if free_in0 is None:
+        free_in = np.full(n_res, t0)
+        free_out = np.full(n_res, t0)
+    else:
+        free_in = np.asarray(free_in0, dtype=np.float64).copy()
+        free_out = np.asarray(free_out0, dtype=np.float64).copy()
     done = np.zeros(F, dtype=bool)
     scratch = np.empty(n_res, dtype=np.int64)
     events: list = []  # heap of future completion (and release) times
+    if free_in0 is not None:
+        events = np.unique(
+            np.concatenate([free_in[free_in > t0], free_out[free_out > t0]])
+        ).tolist()
     remaining = F
     t = t0
     if release is not None:
         rel_uniq, rel_inv = np.unique(release, return_inverse=True)
-        events = rel_uniq.tolist()
+        events.extend(rel_uniq.tolist())
         heapq.heapify(events)
         # flow indices grouped by release value, in priority order
         rel_lists = np.split(
@@ -336,15 +357,23 @@ def _event_loop(
 def _reserving_times(
     rin: np.ndarray, rout: np.ndarray, srv: np.ndarray, delta: float,
     n_res: int, release: np.ndarray | None = None,
+    avail_in: np.ndarray | None = None,
+    avail_out: np.ndarray | None = None,
 ) -> np.ndarray:
     """Strict in-order reservation (no backfill) over merged resources.
 
     ``release`` (per flow) is the online variant: flows are given in
     commitment (arrival) order and each reservation starts no earlier than
     its release.
+
+    ``avail_in``/``avail_out`` (both or neither) carry reservation horizons
+    across service ticks; they are MUTATED in place, which is exactly the
+    incremental contract — a reservation, once made, never changes, so the
+    arrays double as the committed-circuit state.
     """
-    avail_in = np.zeros(n_res)
-    avail_out = np.zeros(n_res)
+    if avail_in is None:
+        avail_in = np.zeros(n_res)
+        avail_out = np.zeros(n_res)
     t_est = np.empty(rin.size)
     for f in range(rin.size):
         i, j = rin[f], rout[f]
@@ -632,6 +661,366 @@ def run_fast_online(
     table = build_flow_table(inst, arrival, algorithm, seed=seed, backend=backend)
     t_est, srv = _times_for_table(inst, arrival, table, scheduling, releases=rel)
     return _schedule_from_times(inst, arrival, None, table, t_est, srv)
+
+
+# --------------------------------------------------------------------------
+# Incremental (streaming) scheduling: the fabric-manager entry point.
+#
+# ``FabricState`` carries committed per-core port-availability horizons and
+# the persistent assignment-phase state across service ticks, so each tick
+# schedules only the *pending* flows (new arrivals + not-yet-committed
+# leftovers) against the circuits already programmed — instead of replaying
+# the whole arrival history through ``run_fast_online``.
+#
+# Bit-exactness vs the full replay rests on the commit rule: a circuit is
+# committed at tick time T iff its establishment time is <= T. Release
+# gating is the exact comparison ``release <= t``, and every coflow admitted
+# after tick T must have release > T, so no future arrival can participate
+# in (or, under ``priority-guard``, protect ports at) any event at or before
+# T — the committed prefix of the schedule is final. Everything later stays
+# tentative and is re-derived next tick with the newly arrived competitors,
+# which is exactly what the full replay's event loop would do.
+# --------------------------------------------------------------------------
+
+#: Intra-core policies the incremental path supports. The sunflow baselines
+#: pick the next coflow at core-free time — a decision that arrivals *after*
+#: the current tick can overturn (the pick may happen arbitrarily far in the
+#: future), so they cannot commit tick-by-tick and require full replay.
+INCREMENTAL_SCHEDULINGS = ("work-conserving", "priority-guard", "reserving")
+
+_PEND_FIELDS = (
+    ("gid", np.int64), ("cid", np.int64), ("fi", np.int64), ("fj", np.int64),
+    ("core", np.int64), ("size", np.float64), ("srv", np.float64),
+    ("rel", np.float64), ("score", np.float64), ("intra", np.int64),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TickCommit:
+    """Circuits committed by one ``FabricState`` tick, as flat arrays.
+
+    ``gid`` is the stream-wide admission index of the flow's coflow (the
+    service's coflow identity); ``cid`` echoes the submitted ``Coflow.cid``.
+    ``finalized`` lists the coflows whose last flow committed this tick as
+    ``(gid, cid, cct, weight)`` tuples — their CCT is now final.
+    """
+
+    t_now: float
+    gid: np.ndarray          # (Fc,) int64
+    cid: np.ndarray          # (Fc,) int64
+    fi: np.ndarray           # (Fc,) int64
+    fj: np.ndarray           # (Fc,) int64
+    core: np.ndarray         # (Fc,) int64
+    size: np.ndarray         # (Fc,) float64
+    t_establish: np.ndarray  # (Fc,) float64
+    t_complete: np.ndarray   # (Fc,) float64
+    finalized: tuple         # ((gid, cid, cct, weight), ...)
+    n_pending: int           # flows still tentative after this tick
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.gid.size)
+
+
+class FabricState:
+    """Incremental online-scheduling state carried across service ticks.
+
+    Usage: one ``step(coflows, releases, t_now)`` call per service tick.
+    Admission contract (checked): tick times are non-decreasing, and every
+    release lies in ``(previous tick time, t_now]`` — i.e. arrivals are
+    admitted at the first tick at or after their release. ``finalize()``
+    commits everything still pending (the end-of-stream tick at t=inf).
+
+    The committed circuits across all ticks are bit-identical — same core
+    choices, same establishment times — to one ``run_fast_online`` call over
+    the whole stream (coflows indexed in admission order), which
+    ``cross_check_incremental`` asserts and tests/test_service.py fuzzes.
+    """
+
+    def __init__(
+        self,
+        *,
+        rates,
+        delta: float,
+        N: int,
+        algorithm: str = "ours",
+        scheduling: str = "work-conserving",
+        seed: int = 0,
+    ):
+        policy, scheduling = _resolve_algorithm(algorithm, scheduling)
+        if scheduling not in INCREMENTAL_SCHEDULINGS:
+            raise ValueError(
+                f"incremental scheduling supports {INCREMENTAL_SCHEDULINGS}; "
+                f"{scheduling!r} (algorithm {algorithm!r}) requires a full "
+                f"run_fast_online replay")
+        self.rates = np.asarray(rates, dtype=np.float64)
+        if self.rates.ndim != 1 or (self.rates <= 0).any():
+            raise ValueError("rates must be a 1-D positive vector")
+        self.delta = float(delta)
+        self.N = int(N)
+        self.K = int(self.rates.shape[0])
+        self.R = float(self.rates.sum())
+        self.algorithm = algorithm
+        self.scheduling = scheduling
+        from .assignment import FlatAssignState
+
+        self._assign = FlatAssignState(policy, self.rates, self.delta, self.N,
+                                       seed=seed)
+        n_res = self.K * self.N
+        #: committed circuit horizons per (core, port) resource
+        self.free_in = np.zeros(n_res)
+        self.free_out = np.zeros(n_res)
+        self.t_now = 0.0
+        self._ticks = 0
+        self._pend = {name: np.zeros(0, dtype=dt) for name, dt in _PEND_FIELDS}
+        # per-gid registry (appended at admission)
+        self._cid: list[int] = []
+        self._weight: list[float] = []
+        self._release: list[float] = []
+        self._nflows: list[int] = []
+        self._ndone: list[int] = []
+        self._cct: list[float] = []
+
+    # -- registry views ----------------------------------------------------
+    @property
+    def n_coflows(self) -> int:
+        """Coflows admitted so far (finalized or not)."""
+        return len(self._cid)
+
+    @property
+    def commit_floor(self) -> float:
+        """Latest committed decision boundary: releases at or before it can
+        no longer be admitted bit-exactly (-inf before the first tick)."""
+        return self.t_now if self._ticks else -np.inf
+
+    @property
+    def n_pending_flows(self) -> int:
+        return int(self._pend["gid"].size)
+
+    def ccts(self) -> np.ndarray:
+        """Running per-coflow CCTs indexed by gid (final once finalized)."""
+        return np.asarray(self._cct, dtype=np.float64)
+
+    def weights(self) -> np.ndarray:
+        return np.asarray(self._weight, dtype=np.float64)
+
+    # -- admission + scheduling -------------------------------------------
+    def _admit(self, coflows, releases: np.ndarray) -> dict:
+        """Register a batch and return its pending-flow arrays in
+        within-batch arrival order (release, then WSPT score desc, then
+        submission order) — the global arrival order's restriction to the
+        batch, since every earlier admission has a strictly earlier
+        release bucket."""
+        from .ordering import priority_scores
+
+        B = len(coflows)
+        gid0 = self.n_coflows
+        for c in coflows:
+            if c.n_ports != self.N:
+                raise ValueError(
+                    f"coflow {c.cid} has N={c.n_ports}, fabric has N={self.N}")
+        # the batch's WSPT scores, through the one shared definition (scores
+        # are per-coflow, so the batch sub-instance computes the same floats
+        # the full-stream replay would)
+        scores = priority_scores(Instance(
+            coflows=tuple(coflows), rates=self.rates, delta=self.delta))
+        for c, r in zip(coflows, releases):
+            self._cid.append(int(c.cid))
+            self._weight.append(float(c.weight))
+            self._release.append(float(r))
+            self._nflows.append(c.num_flows)
+            self._ndone.append(0)
+            self._cct.append(0.0)
+        order = np.lexsort((np.arange(B), -scores, releases))
+        batch = tuple(coflows[int(b)] for b in order)
+        inst_b = Instance(coflows=batch, rates=self.rates, delta=self.delta)
+        pos, cid, fi, fj, sizes = extract_flows(inst_b, np.arange(B))
+        gid = gid0 + order[pos]
+        core = self._assign.assign(fi, fj, sizes)
+        srv = sizes / self.rates[core]
+        counts = np.bincount(pos, minlength=B)
+        starts = np.cumsum(counts) - counts
+        intra = np.arange(pos.size) - starts[pos]
+        return {
+            "gid": gid, "cid": cid,
+            "fi": fi, "fj": fj, "core": core, "size": sizes, "srv": srv,
+            "rel": releases[order][pos], "score": scores[order][pos],
+            "intra": intra,
+        }
+
+    def step(self, coflows, releases, t_now: float) -> TickCommit:
+        """One service tick: admit ``coflows`` (released in
+        ``(previous tick, t_now]``), schedule all pending flows against the
+        committed horizons, and commit every circuit establishing at or
+        before ``t_now``."""
+        t_now = float(t_now)
+        releases = np.asarray(releases, dtype=np.float64)
+        if len(coflows) != releases.size:
+            raise ValueError(
+                f"got {len(coflows)} coflows but {releases.size} releases")
+        if t_now < self.t_now:
+            raise ValueError(
+                f"tick times must be non-decreasing: {t_now} < {self.t_now}")
+        if releases.size:
+            lo = releases.min()
+            if lo < 0:
+                raise ValueError("release times must be >= 0")
+            if self._ticks and lo <= self.t_now:
+                raise ValueError(
+                    f"late arrival: release {lo} is not after the previous "
+                    f"tick at t={self.t_now} — its circuits may already be "
+                    f"committed (clamp the release or tick more often)")
+            if releases.max() > t_now:
+                raise ValueError(
+                    f"cannot admit a coflow released at {releases.max()} at "
+                    f"tick t={t_now}; queue it until its release")
+        t_prev = self.t_now
+        if len(coflows):
+            batch = self._admit(coflows, releases)
+            pend = {
+                name: np.concatenate([self._pend[name], batch[name]])
+                for name, _dt in _PEND_FIELDS
+            }
+        else:
+            pend = self._pend
+        n_res = self.K * self.N
+        rin = pend["core"] * self.N + pend["fi"]
+        rout = pend["core"] * self.N + pend["fj"]
+        if self.scheduling == "reserving":
+            # Reservations commit immediately in arrival order and never
+            # move, so the horizon arrays ARE the reservation state.
+            t_est = _reserving_times(
+                rin, rout, pend["srv"], self.delta, n_res,
+                release=pend["rel"], avail_in=self.free_in,
+                avail_out=self.free_out)
+            commit = np.ones(t_est.size, dtype=bool)
+        else:
+            # Priority order: WSPT score desc, admission index, intra-coflow
+            # extraction order — the global arrival pipeline's flow order
+            # restricted to the pending set.
+            perm = np.lexsort((pend["intra"], pend["gid"], -pend["score"]))
+            te = _event_loop(
+                rin[perm], rout[perm], pend["srv"][perm], pend["core"][perm],
+                self.delta, n_res, self.N, t0=t_prev,
+                guard=(self.scheduling == "priority-guard"),
+                release=pend["rel"][perm],
+                free_in0=self.free_in, free_out0=self.free_out)
+            t_est = np.empty_like(te)
+            t_est[perm] = te
+            commit = t_est <= t_now
+        tc = (t_est[commit] + self.delta) + pend["srv"][commit]
+        if self.scheduling != "reserving":
+            np.maximum.at(self.free_in, rin[commit], tc)
+            np.maximum.at(self.free_out, rout[commit], tc)
+        finalized = []
+        for g, v in zip(pend["gid"][commit].tolist(), tc.tolist()):
+            self._ndone[g] += 1
+            if v > self._cct[g]:
+                self._cct[g] = v
+            if self._ndone[g] == self._nflows[g]:
+                finalized.append((g, self._cid[g], self._cct[g],
+                                  self._weight[g]))
+        if len(coflows):
+            # zero-flow coflows finalize at admission with CCT 0.0
+            for g in range(self.n_coflows - len(coflows), self.n_coflows):
+                if self._nflows[g] == 0:
+                    finalized.append((g, self._cid[g], 0.0, self._weight[g]))
+        out = TickCommit(
+            t_now=t_now,
+            gid=pend["gid"][commit], cid=pend["cid"][commit],
+            fi=pend["fi"][commit], fj=pend["fj"][commit],
+            core=pend["core"][commit], size=pend["size"][commit],
+            t_establish=t_est[commit], t_complete=tc,
+            finalized=tuple(finalized),
+            n_pending=int((~commit).sum()),
+        )
+        self._pend = {name: pend[name][~commit] for name, _dt in _PEND_FIELDS}
+        self.t_now = t_now
+        self._ticks += 1
+        return out
+
+    def finalize(self) -> TickCommit:
+        """End-of-stream tick: commit every still-pending circuit."""
+        return self.step((), (), np.inf)
+
+
+def cross_check_incremental(
+    oinst: OnlineInstance,
+    algorithm: str = "ours",
+    *,
+    seed: int = 0,
+    scheduling: str = "work-conserving",
+    n_ticks: int = 8,
+    tick_times: np.ndarray | None = None,
+) -> list[TickCommit]:
+    """Differential gate for the incremental path: FabricState vs full replay.
+
+    Streams ``oinst``'s coflows through a ``FabricState`` tick by tick
+    (``tick_times``, or ``n_ticks`` evenly spaced over the arrival span) and
+    asserts that the union of committed circuits is BIT-IDENTICAL — same
+    flow set, same core choices, same establishment times, same per-coflow
+    CCTs — to one ``run_fast_online`` call over the whole stream. The replay
+    instance lists coflows in admission order (the service's identity
+    order), which only re-labels ``oinst`` when releases are untied.
+    Returns the per-tick commits.
+    """
+    inst = oinst.inst
+    rel = np.asarray(oinst.releases, dtype=np.float64)
+    if tick_times is None:
+        hi = float(rel.max()) if rel.size else 0.0
+        tick_times = (np.linspace(hi / n_ticks, hi, n_ticks)
+                      if hi > 0 else np.zeros(1))
+    ticks = [float(t) for t in tick_times]
+    if rel.size and (not ticks or ticks[-1] < float(rel.max())):
+        ticks.append(float(rel.max()))
+    batches, prev = [], -np.inf
+    for T in ticks:
+        batches.append(np.nonzero((rel > prev) & (rel <= T))[0])
+        prev = T
+    perm = np.concatenate(batches)
+    if perm.size != inst.M:
+        raise AssertionError("tick partition lost coflows (non-monotone ticks?)")
+    replay = OnlineInstance(
+        inst=Instance(coflows=tuple(inst.coflows[int(m)] for m in perm),
+                      rates=inst.rates, delta=inst.delta),
+        releases=rel[perm])
+    fast = run_fast_online(replay, algorithm, seed=seed, scheduling=scheduling)
+
+    st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                     algorithm=algorithm, scheduling=scheduling, seed=seed)
+    commits = []
+    for T, ids in zip(ticks, batches):
+        commits.append(st.step([inst.coflows[int(m)] for m in ids],
+                               rel[ids], T))
+    commits.append(st.finalize())
+    if st.n_pending_flows:
+        raise AssertionError("finalize left pending flows")
+
+    inc = {}
+    for c in commits:
+        for t in range(c.n_flows):
+            key = (int(c.gid[t]), int(c.fi[t]), int(c.fj[t]))
+            if key in inc:
+                raise AssertionError(f"flow {key} committed twice")
+            inc[key] = (int(c.core[t]), float(c.t_establish[t]))
+    ref = {}
+    for f in fast.flows:
+        ref[(int(fast.pi[f.coflow]), f.i, f.j)] = (f.core, f.t_establish)
+    if set(inc) != set(ref):
+        raise AssertionError(
+            f"incremental/replay flow sets differ ({algorithm}, {scheduling}): "
+            f"{len(inc)} vs {len(ref)} flows")
+    for key, (core, te) in inc.items():
+        if ref[key] != (core, te):
+            raise AssertionError(
+                f"incremental/replay mismatch at {key}: core/t_establish "
+                f"{(core, te)!r} vs {ref[key]!r}")
+    if not np.array_equal(st.ccts(), fast.ccts):
+        worst = int(np.argmax(st.ccts() != fast.ccts))
+        raise AssertionError(
+            f"incremental/replay CCT mismatch at gid {worst}: "
+            f"{st.ccts()[worst]!r} vs {fast.ccts[worst]!r}")
+    return commits
 
 
 def _oracle_assignment(inst: Instance, pi: np.ndarray, policy: str,

@@ -14,7 +14,13 @@ Checks, from first principles (Section III-C/D semantics):
      scheduler paths start flows only at event times >= the release float,
      so no tolerance is needed (or granted).
 
-Every benchmark result in this repo passes through ``validate``.
+Every benchmark result in this repo passes through ``validate``, and the
+fabric-manager service validates every emitted circuit program — so the
+checks are vectorized: flows are flattened to numpy arrays once, timing and
+release checks are array comparisons, and port exclusivity is one sort-based
+interval-overlap pass per direction over (core, port) resource ids instead
+of nested Python loops. Error messages recover the offending flow objects,
+so they stay as specific as the per-flow scan's.
 """
 from __future__ import annotations
 
@@ -27,53 +33,85 @@ __all__ = ["validate"]
 _EPS = 1e-6
 
 
+def _first_bad(mask: np.ndarray) -> int:
+    return int(np.argmax(mask))
+
+
+def _check_exclusivity(core, port, t_est, t_comp, n_ports: int,
+                       axis: str) -> None:
+    """Sort-based interval overlap over merged (core, port) resources.
+
+    Busy intervals on one resource must be disjoint: after a stable sort by
+    (resource, start, end), each interval may only overlap its in-resource
+    successor, so one vectorized comparison of consecutive rows finds any
+    violation.
+    """
+    rid = core * n_ports + port
+    order = np.lexsort((t_comp, t_est, rid))
+    same = rid[order][1:] == rid[order][:-1]
+    overlap = same & (t_est[order][1:] < t_comp[order][:-1] - _EPS)
+    if overlap.any():
+        at = _first_bad(overlap)
+        a, b = int(order[at]), int(order[at + 1])
+        k, p = int(core[a]), int(port[a])
+        raise AssertionError(
+            f"port exclusivity violated on core {k} "
+            f"{'ingress' if axis == 'i' else 'egress'} port {p}: "
+            f"[{t_est[a]},{t_comp[a]}) overlaps [{t_est[b]},...)"
+        )
+
+
 def validate(s: Schedule, releases: np.ndarray | None = None) -> None:
     inst = s.inst
-    # --- 5. release respect (online schedules) ----------------------------
-    if releases is not None:
-        rel = np.asarray(releases, dtype=np.float64)
-        for f in s.flows:
-            orig = int(s.pi[f.coflow])
-            if f.t_establish < rel[orig]:
-                raise AssertionError(
-                    f"flow {f} establishes before coflow {orig}'s release "
-                    f"{rel[orig]!r}")
-    # --- 2. timing / non-preemption --------------------------------------
-    for f in s.flows:
-        rate = float(inst.rates[f.core])
-        if f.t_establish < -_EPS:
-            raise AssertionError(f"flow {f} scheduled before t=0")
-        if abs(f.t_start - (f.t_establish + inst.delta)) > _EPS:
-            raise AssertionError(f"flow {f} violates start = establish + delta")
-        if abs(f.t_complete - (f.t_establish + inst.delta + f.size / rate)) > _EPS:
-            raise AssertionError(f"flow {f} violates non-preemptive duration")
+    F = len(s.flows)
+    if F:
+        core = np.fromiter((f.core for f in s.flows), dtype=np.int64, count=F)
+        fi = np.fromiter((f.i for f in s.flows), dtype=np.int64, count=F)
+        fj = np.fromiter((f.j for f in s.flows), dtype=np.int64, count=F)
+        size = np.fromiter((f.size for f in s.flows), dtype=np.float64, count=F)
+        t_est = np.fromiter((f.t_establish for f in s.flows), dtype=np.float64,
+                            count=F)
+        t_start = np.fromiter((f.t_start for f in s.flows), dtype=np.float64,
+                              count=F)
+        t_comp = np.fromiter((f.t_complete for f in s.flows), dtype=np.float64,
+                             count=F)
+        orig = np.asarray(s.pi, dtype=np.int64)[
+            np.fromiter((f.coflow for f in s.flows), dtype=np.int64, count=F)]
 
-    # --- 1. port exclusivity ---------------------------------------------
-    for k, flows in s.per_core_flows().items():
-        for axis in ("i", "j"):
-            intervals: dict[int, list[tuple[float, float]]] = {}
-            for f in flows:
-                intervals.setdefault(getattr(f, axis), []).append(
-                    (f.t_establish, f.t_complete)
-                )
-            for port, ivs in intervals.items():
-                ivs.sort()
-                for (s0, e0), (s1, _e1) in zip(ivs, ivs[1:]):
-                    if s1 < e0 - _EPS:
-                        raise AssertionError(
-                            f"port exclusivity violated on core {k} "
-                            f"{'ingress' if axis == 'i' else 'egress'} port {port}: "
-                            f"[{s0},{e0}) overlaps [{s1},...)"
-                        )
+        # --- 5. release respect (online schedules) ------------------------
+        if releases is not None:
+            rel = np.asarray(releases, dtype=np.float64)
+            early = t_est < rel[orig]
+            if early.any():
+                b = _first_bad(early)
+                raise AssertionError(
+                    f"flow {s.flows[b]} establishes before coflow "
+                    f"{int(orig[b])}'s release {rel[orig[b]]!r}")
+
+        # --- 2. timing / non-preemption -----------------------------------
+        bad = t_est < -_EPS
+        if bad.any():
+            raise AssertionError(f"flow {s.flows[_first_bad(bad)]} scheduled before t=0")
+        bad = np.abs(t_start - (t_est + inst.delta)) > _EPS
+        if bad.any():
+            raise AssertionError(
+                f"flow {s.flows[_first_bad(bad)]} violates start = establish + delta")
+        bad = np.abs(t_comp - (t_est + inst.delta + size / inst.rates[core])) > _EPS
+        if bad.any():
+            raise AssertionError(
+                f"flow {s.flows[_first_bad(bad)]} violates non-preemptive duration")
+
+        # --- 1. port exclusivity ------------------------------------------
+        _check_exclusivity(core, fi, t_est, t_comp, inst.N, "i")
+        _check_exclusivity(core, fj, t_est, t_comp, inst.N, "j")
 
     # --- 3. demand conservation -------------------------------------------
     # (skipped for an empty instance: there is nothing to conserve, and
     # np.stack of zero demand matrices would raise.)
     if inst.M:
         sent = np.zeros((inst.M, inst.N, inst.N))
-        for f in s.flows:
-            orig = int(s.pi[f.coflow])
-            sent[orig, f.i, f.j] += f.size
+        if F:
+            np.add.at(sent, (orig, fi, fj), size)
         want = np.stack([c.demand for c in inst.coflows])
         if not np.allclose(sent, want, atol=1e-6, rtol=1e-9):
             bad = np.argwhere(~np.isclose(sent, want, atol=1e-6, rtol=1e-9))
@@ -81,8 +119,7 @@ def validate(s: Schedule, releases: np.ndarray | None = None) -> None:
 
     # --- 4. CCT consistency -----------------------------------------------
     ccts = np.zeros(inst.M)
-    for f in s.flows:
-        orig = int(s.pi[f.coflow])
-        ccts[orig] = max(ccts[orig], f.t_complete)
+    if F:
+        np.maximum.at(ccts, orig, t_comp)
     if not np.allclose(ccts, s.ccts, atol=1e-9):
         raise AssertionError("reported CCTs inconsistent with flow completions")

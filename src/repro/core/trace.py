@@ -22,9 +22,10 @@ import dataclasses
 
 import numpy as np
 
-from .coflow import Coflow, Instance
+from .coflow import Coflow, Instance, OnlineInstance
 
-__all__ = ["TraceCoflow", "synth_fb_trace", "load_fb_trace", "sample_instance"]
+__all__ = ["TraceCoflow", "synth_fb_trace", "load_fb_trace",
+           "sample_instance", "sample_online_instance", "arrival_stream"]
 
 N_RACKS = 150
 
@@ -125,7 +126,8 @@ def sample_instance(
     weight_mode: str = "uniform-int",
     weight_params: tuple = (1, 10),
     machine_map: str = "restrict",
-) -> Instance:
+    return_pick: bool = False,
+):
     """Build an N-port, M-coflow instance per the paper's Section V-A.
 
     ``machine_map="restrict"`` (paper-faithful reading): N machines are
@@ -141,6 +143,10 @@ def sample_instance(
 
     Receiver-level bytes are split pseudo-uniformly over the coflow's
     senders with +-20% perturbation (paper Section V-A).
+
+    ``return_pick=True`` additionally returns the picked trace indices
+    (aligned with the instance's coflows) so callers can recover per-coflow
+    trace metadata such as arrival stamps (see ``sample_online_instance``).
     """
     rng = np.random.default_rng(seed)
 
@@ -186,4 +192,51 @@ def sample_instance(
         Coflow(cid=m, demand=demands[int(t_idx)], weight=float(weights[m]))
         for m, t_idx in enumerate(pick)
     ]
-    return Instance(coflows=tuple(coflows), rates=np.asarray(rates, dtype=np.float64), delta=delta)
+    inst = Instance(coflows=tuple(coflows),
+                    rates=np.asarray(rates, dtype=np.float64), delta=delta)
+    if return_pick:
+        return inst, np.asarray(pick, dtype=np.int64)
+    return inst
+
+
+def sample_online_instance(
+    trace: list[TraceCoflow],
+    *,
+    N: int,
+    M: int,
+    rates,
+    delta: float,
+    span: float,
+    seed: int = 0,
+    **kw,
+) -> OnlineInstance:
+    """Sample an instance WITH release times taken from the trace's arrival
+    stamps — the streaming workload the fabric-manager service consumes.
+
+    ``sample_instance`` discards the trace's ``arrival_ms`` column (the
+    paper's experiments release everything at t=0); here each picked
+    coflow's stamp is mapped affinely onto ``[0, span]`` (instance time
+    units), preserving the trace's relative arrival structure — bursts stay
+    bursts. ``span`` is typically a multiple of the offline makespan, as in
+    ``benchmarks/online_arrivals.py``.
+    """
+    if span < 0:
+        raise ValueError("span must be >= 0")
+    inst, pick = sample_instance(trace, N=N, M=M, rates=rates, delta=delta,
+                                 seed=seed, return_pick=True, **kw)
+    if M == 0:
+        return OnlineInstance(inst=inst, releases=np.zeros(0))
+    arr = np.array([trace[int(t)].arrival_ms for t in pick])
+    lo, hi = float(arr.min()), float(arr.max())
+    rel = (np.zeros(M) if span == 0 or hi == lo
+           else (arr - lo) / (hi - lo) * span)
+    return OnlineInstance(inst=inst, releases=rel)
+
+
+def arrival_stream(oinst: OnlineInstance):
+    """Yield ``(coflow, release)`` in arrival order — the event stream a
+    fabric manager's admission queue sees (``service.FabricManager.submit``
+    consumes exactly these pairs)."""
+    rel = np.asarray(oinst.releases, dtype=np.float64)
+    for m in np.argsort(rel, kind="stable"):
+        yield oinst.inst.coflows[int(m)], float(rel[m])

@@ -1,0 +1,29 @@
+"""Fabric-manager service: streaming coflow admission, incremental
+scheduling over committed circuits, and circuit-program emission.
+
+The control-plane layer that *operates* the scheduling engine continuously:
+
+  - ``admission``  — bounded request queue, micro-batching, backpressure;
+  - ``manager``    — :class:`FabricManager`, the service loop (streaming
+    ticks over ``core.engine.FabricState`` + cached one-shot scheduling);
+  - ``program``    — :class:`CircuitProgram` establish/teardown artifacts,
+    self-validating through ``core.simulator.validate``;
+  - ``cache``      — canonical instance hashing + LRU program cache.
+
+See ``examples/serve_fabric.py`` for the end-to-end loop and
+``benchmarks/bench_service.py`` for the load harness.
+"""
+from .admission import (  # noqa: F401
+    AdmissionQueue,
+    ArrivalRequest,
+    BackpressureError,
+)
+from .cache import ProgramCache, instance_key  # noqa: F401
+from .manager import FabricConfig, FabricManager, TickReport  # noqa: F401
+from .program import (  # noqa: F401
+    CircuitEvent,
+    CircuitProgram,
+    compile_commit,
+    compile_schedule,
+    merge_programs,
+)

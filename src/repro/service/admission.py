@@ -1,0 +1,109 @@
+"""Admission control: the request queue in front of the incremental engine.
+
+Arrival requests (one coflow + its release time) are enqueued as they reach
+the fabric manager and drained in micro-batches at each service tick: a
+tick at time T admits every queued request released at or before T, in
+submission order (the engine re-sorts a batch into arrival order
+internally). Requests released in the future stay queued.
+
+Backpressure is a hard bound on queue depth: beyond ``max_depth`` pending
+requests, :meth:`AdmissionQueue.push` raises :class:`BackpressureError` and
+counts the rejection — the caller (load balancer, client library) must slow
+down or retry; silently unbounded queues are how control planes melt.
+
+Late arrivals — a release at or before the fabric's last committed tick,
+for which bit-exact scheduling is no longer possible because those circuits
+are already programmed — are clamped to just after the last tick (the
+coflow is treated as arriving now) and counted, mirroring what a real
+fabric manager does with a request that raced its own admission window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core.coflow import Coflow
+
+__all__ = ["ArrivalRequest", "BackpressureError", "AdmissionQueue"]
+
+
+class BackpressureError(RuntimeError):
+    """The admission queue is full; the caller must slow down."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalRequest:
+    """One coflow arrival: the demand plus its release (arrival) time."""
+
+    coflow: Coflow
+    release: float
+    submitted_s: float  # wall-clock (perf_counter) at submission
+
+
+class AdmissionQueue:
+    """Bounded FIFO of arrival requests with micro-batch draining."""
+
+    def __init__(self, max_depth: int = 1024):
+        if max_depth < 1:
+            raise ValueError("max_depth must be >= 1")
+        self.max_depth = int(max_depth)
+        self.rejected = 0
+        self.late = 0
+        self._q: deque[ArrivalRequest] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    @property
+    def max_release(self) -> float:
+        """Latest release among queued requests (-inf when empty)."""
+        return max((r.release for r in self._q), default=-np.inf)
+
+    def push(self, req: ArrivalRequest) -> None:
+        """Enqueue, or raise :class:`BackpressureError` when full."""
+        if len(self._q) >= self.max_depth:
+            self.rejected += 1
+            raise BackpressureError(
+                f"admission queue full ({self.max_depth} pending requests); "
+                f"retry after the next service tick")
+        self._q.append(req)
+
+    def requeue_front(self, reqs: list[ArrivalRequest]) -> None:
+        """Put already-admitted requests back at the head of the queue (in
+        their original order) after a failed tick; exempt from the depth
+        bound — they were admitted once and must not be dropped."""
+        self._q.extendleft(reversed(reqs))
+
+    def drain(self, t_now: float, t_floor: float) -> list[ArrivalRequest]:
+        """Dequeue every request released at or before ``t_now``.
+
+        Requests released at or before ``t_floor`` (the fabric's last
+        committed tick) are LATE: their release is clamped to just after
+        ``t_floor`` so the incremental engine can still admit them, and the
+        clamp is counted in :attr:`late`. Submission order is preserved;
+        future releases stay queued.
+        """
+        admitted, keep = [], deque()
+        floor = float(np.nextafter(t_floor, np.inf))
+        while self._q:
+            req = self._q.popleft()
+            if req.release > t_now:
+                keep.append(req)
+                continue
+            if req.release <= t_floor:
+                if floor > t_now:
+                    # the admissible window (t_floor, t_now] is empty (tick
+                    # repeated the committed time); hold until it reopens
+                    keep.append(req)
+                    continue
+                self.late += 1
+                req = dataclasses.replace(req, release=floor)
+            admitted.append(req)
+        self._q = keep
+        return admitted

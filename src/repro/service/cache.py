@@ -1,0 +1,96 @@
+"""Circuit-program cache: canonical instance hashing + LRU storage.
+
+Datacenter traffic is highly repetitive — a training job replays the same
+collective phases every step, so the same demand pattern reaches the fabric
+manager over and over. ``instance_key`` derives a canonical content hash of
+everything the scheduling pipeline reads (demand tensors, weights, rates,
+delta, releases, algorithm/scheduling/seed/backend), and ``ProgramCache`` is
+a bounded LRU over it: a hit returns the previously compiled
+:class:`~repro.service.program.CircuitProgram` and skips the engine
+entirely. Correctness is cheap to state — the pipeline is a deterministic
+function of exactly the hashed inputs — and tests assert a cached program is
+array-equal to a freshly computed one.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.coflow import Instance
+
+__all__ = ["instance_key", "ProgramCache"]
+
+
+def instance_key(
+    inst: Instance,
+    releases: np.ndarray | None = None,
+    *,
+    algorithm: str = "ours",
+    scheduling: str = "work-conserving",
+    seed: int = 0,
+    backend: str = "numpy",
+) -> str:
+    """Canonical content hash of one scheduling request.
+
+    Two requests share a key iff the engine would do the identical
+    computation: same demand matrices in the same order, same weights,
+    releases, fabric (rates, delta, N), and pipeline knobs. ``Coflow.cid``
+    is deliberately EXCLUDED — it is a label, read by nothing in the
+    pipeline, and including it would miss the repeated-pattern hits this
+    cache exists for.
+    """
+    h = hashlib.sha256()
+    h.update(f"{algorithm}|{scheduling}|{seed}|{backend}|".encode())
+    h.update(f"M={inst.M},N={inst.N},K={inst.K},delta={inst.delta!r}".encode())
+    h.update(np.ascontiguousarray(inst.rates).tobytes())
+    h.update(np.ascontiguousarray(inst.weights).tobytes())
+    for c in inst.coflows:
+        h.update(np.ascontiguousarray(c.demand).tobytes())
+    if releases is not None:
+        h.update(b"releases")
+        h.update(np.ascontiguousarray(
+            np.asarray(releases, dtype=np.float64)).tobytes())
+    return h.hexdigest()
+
+
+class ProgramCache:
+    """Bounded LRU cache: instance key -> compiled program artifact.
+
+    Values are opaque to the cache (``FabricManager`` stores
+    ``(program, submitted cid order)`` so hits can be re-labeled to the
+    caller's coflow ids)."""
+
+    def __init__(self, capacity: int = 128):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.hits = 0
+        self.misses = 0
+        self._store: OrderedDict[str, object] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key: str):
+        """Program for ``key``, or None (counts a hit/miss either way)."""
+        try:
+            val = self._store[key]
+        except KeyError:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return val
+
+    def put(self, key: str, program) -> None:
+        self._store[key] = program
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

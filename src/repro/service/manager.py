@@ -1,0 +1,275 @@
+"""The fabric manager: a long-running scheduling service over the engine.
+
+``FabricManager`` is the control-plane loop the paper's Algorithm 1 lives
+inside in a real deployment (cf. Jupiter-style OCS fabrics): coflow-arrival
+requests stream in, are micro-batched by the admission queue, scheduled
+incrementally against the already-committed circuits
+(``core.engine.FabricState``), and compiled into per-core
+:class:`~repro.service.program.CircuitProgram` artifacts — the
+establish/teardown sequences the optical switches would execute.
+
+Two request planes:
+
+  - **streaming** (``submit`` + ``tick``): the production path. Per tick,
+    only pending flows are scheduled — work scales with the backlog, not
+    with the stream history (``benchmarks/bench_service.py`` measures the
+    resulting admission throughput against naive full replay).
+  - **one-shot** (``schedule_instance``): schedule a whole instance at
+    once, fronted by the canonical-hash LRU program cache — repeated demand
+    patterns (e.g. a training job's identical steps) skip the engine
+    entirely. Grid sweeps dispatch to ``core.run_batch`` via
+    ``sweep_instances``.
+
+Every emitted program can be round-tripped through the independent referee
+(``CircuitProgram.validate``); ``validate_every_tick=True`` does it inline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.batch import ResultTable, run_batch
+from repro.core.coflow import Coflow, Instance, OnlineInstance
+from repro.core.engine import (
+    FabricState,
+    INCREMENTAL_SCHEDULINGS,
+    run_fast,
+    run_fast_online,
+)
+
+from .admission import AdmissionQueue, ArrivalRequest, BackpressureError
+from .cache import ProgramCache, instance_key
+from .program import (
+    CircuitProgram,
+    compile_commit,
+    compile_schedule,
+    merge_programs,
+)
+
+__all__ = ["FabricConfig", "TickReport", "FabricManager", "BackpressureError"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Static configuration of one fabric-manager service."""
+
+    rates: tuple = (10.0, 20.0, 30.0)
+    delta: float = 8.0
+    N: int = 16
+    algorithm: str = "ours"
+    scheduling: str = "work-conserving"
+    seed: int = 0
+    max_queue_depth: int = 1024       # admission backpressure threshold
+    cache_capacity: int = 128         # one-shot program cache entries
+    validate_every_tick: bool = False  # referee every emitted tick program
+    #: Tick reports (each holding its circuit program) retained for
+    #: ``program()`` / inspection. ``None`` keeps the whole stream — right
+    #: for tests and bounded runs; set a bound for a long-running service
+    #: (summary() stats stay exact either way via running counters, but
+    #: ``program()`` then only covers the retained window).
+    max_history_ticks: int | None = None
+    #: Sliding window of per-coflow decision-latency samples for the
+    #: p50/p99 telemetry.
+    max_latency_samples: int = 65536
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """What one service tick did."""
+
+    t_now: float
+    admitted: int          # coflows admitted this tick
+    committed_flows: int   # circuits committed this tick
+    finalized: int         # coflows whose CCT became final
+    pending_flows: int     # backlog after the tick
+    queue_depth: int       # requests still queued after the tick
+    wall_s: float          # tick wall-clock
+    program: CircuitProgram
+
+
+class FabricManager:
+    """Streaming coflow admission -> incremental scheduling -> programs."""
+
+    def __init__(self, config: FabricConfig = FabricConfig()):
+        if config.scheduling not in INCREMENTAL_SCHEDULINGS:
+            raise ValueError(
+                f"service scheduling must be incremental "
+                f"({INCREMENTAL_SCHEDULINGS}), got {config.scheduling!r}")
+        self.config = config
+        self.state = FabricState(
+            rates=np.asarray(config.rates, dtype=np.float64),
+            delta=config.delta, N=config.N, algorithm=config.algorithm,
+            scheduling=config.scheduling, seed=config.seed)
+        self.queue = AdmissionQueue(max_depth=config.max_queue_depth)
+        self.cache = ProgramCache(capacity=config.cache_capacity)
+        self.reports: "deque[TickReport]" = deque(
+            maxlen=config.max_history_ticks)
+        self.latencies_s: "deque[float]" = deque(
+            maxlen=config.max_latency_samples)
+        self._submitted_s: dict[int, float] = {}  # gid -> submit wall-clock
+        # running counters (exact regardless of history trimming); per-coflow
+        # results live in FabricState's registry (ccts()/weights() by gid)
+        self._n_finalized = 0
+        self._n_ticks = 0
+        self._flows_committed = 0
+        self._tick_wall_s = 0.0
+        self._depth_max = 0
+        self._depth_sum = 0.0
+
+    # -- streaming plane ---------------------------------------------------
+    def submit(self, coflow: Coflow, release: float) -> None:
+        """Enqueue one arrival; raises BackpressureError when the queue is
+        full (the caller must back off until the next tick drains it).
+        Malformed requests are rejected HERE, before they can enter the
+        queue and poison a later tick's whole batch."""
+        if coflow.n_ports != self.config.N:
+            raise ValueError(
+                f"coflow {coflow.cid} has N={coflow.n_ports}, fabric has "
+                f"N={self.config.N}")
+        self.queue.push(ArrivalRequest(
+            coflow=coflow, release=float(release),
+            submitted_s=time.perf_counter()))
+
+    def tick(self, t_now: float) -> TickReport:
+        """One service tick at stream time ``t_now``: drain the admission
+        queue, schedule pending flows incrementally, commit + compile this
+        tick's circuits."""
+        t0 = time.perf_counter()
+        admitted = self.queue.drain(t_now, self.state.commit_floor)
+        gid0 = self.state.n_coflows
+        try:
+            commit = self.state.step(
+                [r.coflow for r in admitted],
+                np.array([r.release for r in admitted], dtype=np.float64),
+                t_now)
+        except Exception:
+            # the batch was rejected whole — put the drained requests back
+            # (front, original order) instead of silently losing them
+            self.queue.requeue_front(admitted)
+            raise
+        for off, r in enumerate(admitted):
+            self._submitted_s[gid0 + off] = r.submitted_s
+        program = compile_commit(commit, self.state.rates, self.state.delta,
+                                 self.state.N)
+        if self.config.validate_every_tick:
+            program.validate()
+        end = time.perf_counter()
+        self._n_finalized += len(commit.finalized)
+        for fin in commit.finalized:
+            self.latencies_s.append(end - self._submitted_s.pop(fin[0], end))
+        report = TickReport(
+            t_now=float(t_now), admitted=len(admitted),
+            committed_flows=commit.n_flows, finalized=len(commit.finalized),
+            pending_flows=commit.n_pending, queue_depth=self.queue.depth,
+            wall_s=end - t0, program=program)
+        self.reports.append(report)
+        self._n_ticks += 1
+        self._flows_committed += commit.n_flows
+        self._tick_wall_s += report.wall_s
+        self._depth_max = max(self._depth_max, report.queue_depth)
+        self._depth_sum += report.queue_depth
+        return report
+
+    def flush(self) -> TickReport:
+        """End-of-stream: commit everything still pending or queued."""
+        if self.queue.depth:
+            # admit every queued request at its own release, then finalize
+            self.tick(max(self.queue.max_release,
+                          np.nextafter(self.state.t_now, np.inf)))
+        return self.tick(np.inf)
+
+    def program(self) -> CircuitProgram:
+        """The merged circuit program across the retained tick history (the
+        whole stream unless ``max_history_ticks`` trimmed it)."""
+        return merge_programs([r.program for r in self.reports],
+                              self.state.rates, self.state.delta,
+                              self.state.N)
+
+    def ccts(self) -> np.ndarray:
+        """Per-coflow CCTs by admission id (final for finalized coflows)."""
+        return self.state.ccts()
+
+    # -- one-shot plane ----------------------------------------------------
+    def schedule_instance(
+        self,
+        inst: Instance | OnlineInstance,
+        *,
+        algorithm: str | None = None,
+        scheduling: str | None = None,
+        seed: int | None = None,
+        backend: str = "numpy",
+    ) -> tuple[CircuitProgram, bool]:
+        """Schedule a whole instance, through the program cache.
+
+        Returns ``(program, hit)`` — on a hit the engine never runs; the
+        cached program is the byte-identical artifact of the earlier
+        computation (the pipeline is deterministic in the hashed inputs).
+        """
+        algorithm = self.config.algorithm if algorithm is None else algorithm
+        scheduling = self.config.scheduling if scheduling is None else scheduling
+        seed = self.config.seed if seed is None else seed
+        releases = None
+        if isinstance(inst, OnlineInstance):
+            inst, releases = inst.inst, inst.releases
+        key = instance_key(inst, releases, algorithm=algorithm,
+                           scheduling=scheduling, seed=seed, backend=backend)
+        # The cache stores programs labeled by coflow INDEX (canonical: the
+        # key excludes cid labels, so a hit may come from a submission with
+        # different cids); relabel to this caller's ids with one lookup.
+        sub_cids = np.array([c.cid for c in inst.coflows], dtype=np.int64)
+        canonical = self.cache.get(key)
+        hit = canonical is not None
+        if not hit:
+            if releases is None:
+                s = run_fast(inst, algorithm, seed=seed,
+                             scheduling=scheduling, backend=backend)
+            else:
+                s = run_fast_online(
+                    OnlineInstance(inst=inst, releases=releases),
+                    algorithm, seed=seed, scheduling=scheduling,
+                    backend=backend)
+            canonical = compile_schedule(s, index_labels=True)
+        program = dataclasses.replace(canonical, cid=sub_cids[canonical.cid])
+        if not hit:
+            if self.config.validate_every_tick:
+                program.validate()  # before caching: never store unvetted
+            self.cache.put(key, canonical)
+        return program, hit
+
+    def sweep_instances(self, instances, algorithms=("ours",),
+                        **kw) -> ResultTable:
+        """Grid dispatch to ``core.run_batch`` (validator-gated sweeps)."""
+        return run_batch(instances, algorithms, **kw)
+
+    # -- telemetry ---------------------------------------------------------
+    def summary(self) -> dict:
+        """Service-level metrics for dashboards / the load harness.
+
+        Counters are maintained incrementally, so they stay exact even when
+        ``max_history_ticks`` bounds the retained tick reports; the latency
+        percentiles cover the ``max_latency_samples`` most recent coflows.
+        """
+        lat = np.asarray(self.latencies_s, dtype=np.float64)
+        total_wall = self._tick_wall_s
+        return {
+            "coflows_admitted": self.state.n_coflows,
+            "coflows_finalized": self._n_finalized,
+            "flows_committed": self._flows_committed,
+            "ticks": self._n_ticks,
+            "total_tick_wall_s": total_wall,
+            "coflows_per_s": (self._n_finalized / total_wall
+                              if total_wall > 0 else 0.0),
+            "decision_latency_p50_s": float(np.quantile(lat, 0.50)) if lat.size else 0.0,
+            "decision_latency_p99_s": float(np.quantile(lat, 0.99)) if lat.size else 0.0,
+            "queue_depth_max": self._depth_max,
+            "queue_depth_mean": (self._depth_sum / self._n_ticks
+                                 if self._n_ticks else 0.0),
+            "rejected": self.queue.rejected,
+            "late_arrivals": self.queue.late,
+            "cache_hits": self.cache.hits,
+            "cache_misses": self.cache.misses,
+            "cache_hit_rate": self.cache.hit_rate,
+        }
