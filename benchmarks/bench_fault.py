@@ -1,0 +1,197 @@
+"""Fault-aware fabric benchmark: recovery latency + degraded throughput.
+
+A trace-derived arrival stream is driven through the fabric-manager service
+while topology churn is injected mid-stream (core failures at half the
+arrival span, then a port flap). For each scenario the harness reports:
+
+  - **recovery latency**, two ways: the control-plane cost of the fault —
+    wall-clock of ``report_fault`` (abort + requeue + reassign) plus the
+    next tick's re-derivation — against the only correct alternative, a
+    full from-scratch replay of the admitted history on the degraded
+    fabric; and the stream-time **recovery span** (fault time until the
+    last re-served flow completes);
+  - **degraded-vs-healthy weighted CCT**: the price of finishing the same
+    workload on the surviving cores (and how the backlog re-spreads);
+  - abort/requeue volumes and surviving-commit counts.
+
+Every per-tick program and the merged program of record pass the
+independent referee (outside the timed regions), and the healthy run's
+CCTs are asserted bit-equal to a plain ``run_fast_online`` replay — the
+baseline is honest before the fabric is broken.
+
+Emitted as ``BENCH_fault.json`` by ``benchmarks/run.py --section fault``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import tick_times
+from repro.core import (
+    CoreDown,
+    FaultInjector,
+    PortFlap,
+    run_fast_online,
+    sample_online_instance,
+    synth_fb_trace,
+)
+from repro.core.coflow import Instance, OnlineInstance
+from repro.service import FabricConfig, FabricManager
+
+RATES = (10.0, 20.0, 30.0)
+DELTA = 8.0
+
+
+def drive(oinst: OnlineInstance, n_ticks: int,
+          faults=None) -> tuple[FabricManager, dict]:
+    """Stream the instance through a (possibly fault-injected) manager."""
+    inst = oinst.inst
+    mgr = FabricManager(FabricConfig(
+        rates=tuple(inst.rates), delta=inst.delta, N=inst.N,
+        max_queue_depth=max(64, inst.M), faults=faults))
+    order = np.argsort(oinst.releases, kind="stable")
+    rel = oinst.releases
+    nxt = 0
+    tick_walls = []
+    for T in tick_times(oinst, n_ticks):
+        t0 = time.perf_counter()
+        while nxt < order.size and rel[order[nxt]] <= T:
+            m = int(order[nxt])
+            mgr.submit(inst.coflows[m], float(rel[m]))
+            nxt += 1
+        mgr.tick(float(T))
+        tick_walls.append(time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    mgr.flush()
+    tick_walls.append(time.perf_counter() - t0)
+    for r in mgr.reports:  # referee everything, outside the timed region
+        r.program.validate()
+    mgr.program().validate()
+    weights = inst.weights[order]
+    ccts = mgr.ccts()
+    out = {
+        "wall_s": float(np.sum(tick_walls)),
+        "tick_walls": tick_walls,
+        "weighted_cct": float((weights * ccts).sum()),
+        "makespan": float(ccts.max()) if ccts.size else 0.0,
+        "_ccts_stream": ccts,
+        "_order": order,
+    }
+    return mgr, out
+
+
+def rebuild_from_scratch_wall(oinst: OnlineInstance, t_f: float,
+                              up_idx: list) -> float:
+    """The naive recovery alternative: replay every admitted coflow through
+    a fresh engine run on the surviving cores."""
+    inst = oinst.inst
+    sub = OnlineInstance(
+        inst=Instance(coflows=inst.coflows, rates=inst.rates[up_idx],
+                      delta=inst.delta),
+        releases=oinst.releases)
+    t0 = time.perf_counter()
+    run_fast_online(sub, "ours")
+    return time.perf_counter() - t0
+
+
+def fault_scenario(oinst: OnlineInstance, n_ticks: int, healthy: dict,
+                   events: list, label: str) -> dict:
+    """Drive the stream with ``events`` injected; measure recovery."""
+    t_f = min(ev.t for ev in events)
+    mgr, out = drive(oinst, n_ticks, faults=FaultInjector(events))
+    # the fault tick is the first tick at or after t_f (finalize included)
+    ticks = list(tick_times(oinst, n_ticks)) + [np.inf]
+    fault_tick = next(i for i, T in enumerate(ticks) if T >= t_f)
+    aborted = sum(r.aborted for r in mgr.fault_reports)
+    requeued = sum(r.requeued for r in mgr.fault_reports)
+    affected = {a.gid for app in mgr.state.fault_log for a in app.aborted}
+    recovery_span = (max(float(mgr.ccts()[g]) for g in affected) - t_f
+                     if affected else 0.0)
+    healthy_tick = float(np.median(healthy["tick_walls"]))
+    row = {
+        "label": label,
+        "t_fault": float(t_f),
+        "aborted_circuits": aborted,
+        "requeued_flows": requeued,
+        "reassigned_pending": sum(
+            r.reassigned_pending for r in mgr.fault_reports),
+        "recovery_tick_wall_s": float(out["tick_walls"][fault_tick]),
+        "healthy_tick_wall_s": healthy_tick,
+        "recovery_span": recovery_span,
+        "weighted_cct": out["weighted_cct"],
+        "degraded_over_healthy_wcct": out["weighted_cct"]
+        / healthy["weighted_cct"],
+        "makespan": out["makespan"],
+        "wall_s": out["wall_s"],
+    }
+    return row
+
+
+def main(N: int = 24, M: int = 240, n_ticks: int = 16, seed: int = 0) -> dict:
+    trace = synth_fb_trace(526, seed=2026)
+    print("== Fault-aware fabric: recovery latency + degraded throughput ==")
+    off = sample_online_instance(trace, N=N, M=M, rates=RATES, delta=DELTA,
+                                 span=0.0, seed=seed)
+    mk = float(run_fast_online(off, "ours").ccts.max())
+    oinst = sample_online_instance(trace, N=N, M=M, rates=RATES, delta=DELTA,
+                                   span=mk, seed=seed)
+    ticks = tick_times(oinst, n_ticks)
+    t_f = float(ticks[n_ticks // 2]) + 1.0  # just after a commit wave
+
+    _mgr, healthy = drive(oinst, n_ticks)
+    # honesty gate: the healthy stream equals a one-shot replay bit for bit
+    order = healthy["_order"]
+    replay = OnlineInstance(
+        inst=Instance(coflows=tuple(oinst.inst.coflows[int(m)]
+                                    for m in order),
+                      rates=oinst.inst.rates, delta=oinst.inst.delta),
+        releases=oinst.releases[order])
+    assert np.array_equal(healthy["_ccts_stream"],
+                          run_fast_online(replay, "ours").ccts), \
+        "healthy stream diverged from the replay oracle"
+    print(f"workload: N={N} M={M}, arrival span = offline makespan "
+          f"{mk:.0f}, {n_ticks} ticks; fault at t={t_f:.0f}")
+    print(f"healthy: weighted CCT {healthy['weighted_cct']:.3e}, "
+          f"wall {healthy['wall_s']:.2f}s")
+
+    rows = []
+    scenarios = [
+        ([CoreDown(t=t_f, core=2)], "core2-down"),
+        ([CoreDown(t=t_f, core=2), CoreDown(t=t_f, core=1)],
+         "core1+2-down"),
+        ([PortFlap(t=t_f, t_end=t_f + mk * 0.1, core=2, port=0)],
+         "port-flap"),
+    ]
+    print(f"{'scenario':>14s} {'abort':>6s} {'requeue':>8s} "
+          f"{'rec tick ms':>12s} {'rebuild ms':>11s} {'rec span':>9s} "
+          f"{'wcct ratio':>11s}")
+    for events, label in scenarios:
+        row = fault_scenario(oinst, n_ticks, healthy, events, label)
+        if label.startswith("core"):
+            failed = {ev.core for ev in events}
+            up_idx = [k for k in range(len(RATES)) if k not in failed]
+            row["rebuild_from_scratch_s"] = rebuild_from_scratch_wall(
+                oinst, t_f, up_idx)
+        else:
+            row["rebuild_from_scratch_s"] = float("nan")
+        rows.append(row)
+        print(f"{label:>14s} {row['aborted_circuits']:6d} "
+              f"{row['requeued_flows']:8d} "
+              f"{row['recovery_tick_wall_s']*1e3:12.1f} "
+              f"{row['rebuild_from_scratch_s']*1e3:11.1f} "
+              f"{row['recovery_span']:9.0f} "
+              f"{row['degraded_over_healthy_wcct']:10.3f}x")
+    for row in rows:
+        row.pop("_ccts_stream", None)
+    healthy_out = {k: v for k, v in healthy.items()
+                   if not k.startswith("_") and k != "tick_walls"}
+    worst = max(r["degraded_over_healthy_wcct"] for r in rows)
+    print(f"worst degraded-vs-healthy weighted CCT: {worst:.3f}x "
+          f"(every program referee-validated)")
+    return {"N": N, "M": M, "n_ticks": n_ticks, "offline_makespan": mk,
+            "t_fault": t_f, "healthy": healthy_out, "rows": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import tick_times
 from repro.core import (
     row_from_ccts,
     run_fast_online,
@@ -41,13 +42,6 @@ RATES = (10.0, 20.0, 30.0)
 DELTA = 8.0
 
 
-def _tick_times(oinst: OnlineInstance, n_ticks: int) -> np.ndarray:
-    hi = float(oinst.releases.max())
-    if hi <= 0:
-        return np.zeros(1)
-    return np.linspace(hi / n_ticks, hi, n_ticks)
-
-
 def run_incremental(oinst: OnlineInstance, n_ticks: int,
                     validate: bool = True) -> dict:
     """Stream the instance through the service; returns summary + wall."""
@@ -59,7 +53,7 @@ def run_incremental(oinst: OnlineInstance, n_ticks: int,
     rel = oinst.releases
     nxt = 0
     t_wall = 0.0
-    for T in _tick_times(oinst, n_ticks):
+    for T in tick_times(oinst, n_ticks):
         t0 = time.perf_counter()
         while nxt < order.size and rel[order[nxt]] <= T:
             m = int(order[nxt])
@@ -88,7 +82,7 @@ def run_naive(oinst: OnlineInstance, n_ticks: int) -> dict:
     rel = oinst.releases
     t_wall = 0.0
     ccts = None
-    ticks = list(_tick_times(oinst, n_ticks)) + [np.inf]
+    ticks = list(tick_times(oinst, n_ticks)) + [np.inf]
     for T in ticks:
         ids = np.nonzero(rel <= T)[0]
         if ids.size == 0:

@@ -35,6 +35,16 @@ def trace():
     return _TRACE
 
 
+def tick_times(oinst, n_ticks: int) -> np.ndarray:
+    """Evenly spaced service-tick grid over an online instance's arrival
+    span (one tick at t=0 when every release is 0) — shared by the service
+    and fault load harnesses so their streams stay comparable."""
+    hi = float(oinst.releases.max()) if oinst.releases.size else 0.0
+    if hi <= 0:
+        return np.zeros(1)
+    return np.linspace(hi / n_ticks, hi, n_ticks)
+
+
 def _jsonable(x):
     """Recursively coerce numpy scalars/arrays and dataclass-ish payloads."""
     if isinstance(x, dict):

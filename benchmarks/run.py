@@ -1,10 +1,11 @@
 """Benchmark aggregator — one section per paper table/figure plus the
 framework-level reports.
 
-  python -m benchmarks.run [--full]
+  python -m benchmarks.run [--full] [--section NAME]
 
 Default mode keeps wall time modest (fewer seeds / subsets); --full runs the
-paper's complete grids. Every section additionally emits a machine-readable
+paper's complete grids; ``--section fault`` (or any other section name) runs
+just that section. Every section additionally emits a machine-readable
 ``BENCH_<name>.json`` artifact (setting, wall-clock, returned metrics) under
 ``--out`` (default ``benchmarks/out``, override with $BENCH_OUT) so the
 performance trajectory is diffable across PRs.
@@ -33,6 +34,8 @@ def _section(name: str, fn, /, **kw) -> None:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--section", type=str, default=None,
+                    help="run only the named section (e.g. fault, service)")
     ap.add_argument("--skip-comm", action="store_true",
                     help="skip the 512-device comm-planner compile")
     ap.add_argument("--workers", type=int, default=None,
@@ -47,6 +50,7 @@ def main(argv=None) -> int:
     from benchmarks import (
         bench_assignment,
         bench_core_scaling,
+        bench_fault,
         bench_service,
         comm_planner,
         common,
@@ -64,27 +68,37 @@ def main(argv=None) -> int:
         import os
         os.environ["BENCH_OUT"] = args.out
 
-    _section("fig4_ablation", paper_fig4_ablation.main,
-             seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2))
-    _section("delta_sensitivity", paper_delta_sensitivity.main,
-             deltas=(2, 4, 6, 8, 10, 12) if args.full else (2, 8, 12),
-             seeds=(0, 1, 2) if args.full else (0, 1))
-    _section("n_scaling", paper_n_scaling.main,
-             ns=(8, 12, 16, 24, 32) if args.full else (8, 16, 32),
-             seeds=(0, 1, 2) if args.full else (0, 1))
-    _section("m_scaling", paper_m_scaling.main,
-             ms=(50, 100, 150, 200, 250) if args.full else (50, 100, 250),
-             seeds=(0, 1) if args.full else (0,))
-    _section("gamma_w", paper_gamma_w.main,
-             seeds=(0, 1) if args.full else (0,))
-    _section("online_arrivals", online_arrivals.main,
-             seeds=(0, 1) if args.full else (0,))
-    _section("core_scaling", bench_core_scaling.main, workers=args.workers)
-    _section("assignment", bench_assignment.main, workers=args.workers)
-    _section("service", bench_service.main,
-             n_ticks=24 if args.full else 16)
-    _section("roofline", roofline_report.main)
-    if not args.skip_comm:
+    sections = [
+        ("fig4_ablation", paper_fig4_ablation.main,
+         dict(seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2))),
+        ("delta_sensitivity", paper_delta_sensitivity.main,
+         dict(deltas=(2, 4, 6, 8, 10, 12) if args.full else (2, 8, 12),
+              seeds=(0, 1, 2) if args.full else (0, 1))),
+        ("n_scaling", paper_n_scaling.main,
+         dict(ns=(8, 12, 16, 24, 32) if args.full else (8, 16, 32),
+              seeds=(0, 1, 2) if args.full else (0, 1))),
+        ("m_scaling", paper_m_scaling.main,
+         dict(ms=(50, 100, 150, 200, 250) if args.full else (50, 100, 250),
+              seeds=(0, 1) if args.full else (0,))),
+        ("gamma_w", paper_gamma_w.main,
+         dict(seeds=(0, 1) if args.full else (0,))),
+        ("online_arrivals", online_arrivals.main,
+         dict(seeds=(0, 1) if args.full else (0,))),
+        ("core_scaling", bench_core_scaling.main, dict(workers=args.workers)),
+        ("assignment", bench_assignment.main, dict(workers=args.workers)),
+        ("service", bench_service.main,
+         dict(n_ticks=24 if args.full else 16)),
+        ("fault", bench_fault.main,
+         dict(M=360 if args.full else 240, n_ticks=16)),
+        ("roofline", roofline_report.main, {}),
+    ]
+    known = [name for name, _fn, _kw in sections] + ["comm_planner"]
+    if args.section is not None and args.section not in known:
+        ap.error(f"unknown section {args.section!r}; one of {known}")
+    for name, fn, kw in sections:
+        if args.section is None or args.section == name:
+            _section(name, fn, **kw)
+    if not args.skip_comm and args.section in (None, "comm_planner"):
         print("#" * 72)
         try:
             _section("comm_planner", comm_planner.main)

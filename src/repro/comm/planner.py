@@ -6,8 +6,10 @@ The planner reports, per algorithm:
   - total / weighted CCT of the step's collective phases on the OCS layer,
   - makespan (= the collective term the fabric actually delivers),
   - and the idealized wire-speed lower bound  (delta + rho/R per coflow),
-so EXPERIMENTS.md can show "wire-speed -> +reconfiguration+contention,
-scheduled well (OURS) vs scheduled naively (baselines)".
+so the comm-planner section of ``benchmarks/run.py`` (its artifact
+``BENCH_comm_planner.json``; methodology in EXPERIMENTS.md) can show
+"wire-speed -> +reconfiguration+contention, scheduled well (OURS) vs
+scheduled naively (baselines)".
 """
 from __future__ import annotations
 
@@ -53,6 +55,7 @@ class PlanReport:
     schedule: Schedule | None
     program: object | None = None  # service.CircuitProgram (service path)
     cached: bool = False           # program came from the service cache
+    degraded: bool = False         # planned on a fabric with cores down
 
     def row(self) -> dict:
         d = dataclasses.asdict(self)
@@ -106,6 +109,14 @@ def plan_circuits_service(
     Pass a shared ``manager`` to keep the cache warm across steps; each
     emitted program is validated by the independent referee. Returns
     ``(reports, manager)``.
+
+    Degraded operation rides along for free: if the shared manager has
+    taken a ``report_fault(CoreDown(...))`` (e.g. via the
+    ``distributed.fault.ElasticTrainer`` wiring), the replanned step's
+    circuits avoid the failed core — the manager schedules over the
+    survivors and relabels to physical core ids — and the report is marked
+    ``degraded`` (cache keys are fingerprinted per up-core set, so healthy
+    and degraded programs never cross).
     """
     from repro.service import FabricConfig, FabricManager
 
@@ -141,5 +152,6 @@ def plan_circuits_service(
             schedule=None,
             program=program,
             cached=cached,
+            degraded=not bool(manager.state.core_up.all()),
         )
     return out, manager

@@ -46,6 +46,15 @@ from .coflow import (  # noqa: F401
     row_loads,
     tau,
 )
+from .fault import (  # noqa: F401
+    AbortedCircuit,
+    CoreDown,
+    CoreUp,
+    DeltaDrift,
+    FaultApplication,
+    FaultInjector,
+    PortFlap,
+)
 from .lower_bounds import CoreState, global_lb, per_core_lb  # noqa: F401
 from .ordering import order_coflows, priority_scores  # noqa: F401
 from .scheduler import ALGORITHMS, Schedule, run, tail_cct, weighted_cct  # noqa: F401

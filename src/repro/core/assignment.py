@@ -184,6 +184,11 @@ class FlatAssignState:
         self.n_ports = int(n_ports)
         self.n_assigned = 0
         K = rates.shape[0]
+        # Per-core reconfiguration delay (fault model: DeltaDrift). All equal
+        # to the nominal delta until set_delta diverges one; the undrifted
+        # hot loops keep reading the scalar.
+        self._delta_c = [self.delta] * K
+        self._drifted = False
         if policy == "tau-aware":
             # per core: (row_load, col_load, row_tau, col_tau, nz bitmap, rate)
             self._cores = [
@@ -200,17 +205,56 @@ class FlatAssignState:
             self._rng = np.random.default_rng(seed)
             self._p = rates / rates.sum()
 
-    def assign(self, fi: np.ndarray, fj: np.ndarray,
-               sizes: np.ndarray) -> np.ndarray:
+    def set_delta(self, core: int, delta: float) -> None:
+        """Fault model (``DeltaDrift``): core ``core`` prices reconfigurations
+        at ``delta`` from now on. Only the tau-aware policy reads delta."""
+        if delta < 0:
+            raise ValueError("drifted delta must be >= 0")
+        self._delta_c[int(core)] = float(delta)
+        self._drifted = any(d != self.delta for d in self._delta_c)
+
+    def assign(self, fi: np.ndarray, fj: np.ndarray, sizes: np.ndarray,
+               *, up: np.ndarray | None = None) -> np.ndarray:
         """Assign one chunk of flows (in global arrival order), mutating the
-        persistent state; returns the ``(len(fi),)`` int64 core choices."""
+        persistent state; returns the ``(len(fi),)`` int64 core choices.
+
+        ``up`` (a ``(K,)`` bool mask; fault model) restricts choices to the
+        up cores. Restricting to a core subset produces choices bit-identical
+        to a fresh state built over just those cores (mapped through the
+        surviving indices): the per-core structures evolve independently,
+        the argmin tie-break scans cores in ascending index either way, and
+        the random policy's renormalized probability vector equals the
+        sub-fabric's — asserted by the (K-1)-core differential in
+        ``tests/test_fault_differential.py``.
+        """
         self.n_assigned += int(fi.size)
+        if up is not None:
+            up = np.asarray(up, dtype=bool)
+            if up.shape != (self.rates.shape[0],):
+                raise ValueError(
+                    f"up mask must have shape ({self.rates.shape[0]},)")
+            if not up.any():
+                raise ValueError("cannot assign flows: no core is up")
+            if up.all():
+                up = None
         if self.policy == "tau-aware":
-            return self._assign_tau_aware(fi, fj, sizes)
+            if up is None and not self._drifted:
+                return self._assign_tau_aware(fi, fj, sizes)
+            up_idx = (range(self.rates.shape[0]) if up is None
+                      else np.nonzero(up)[0].tolist())
+            return self._assign_tau_aware_sub(fi, fj, sizes, list(up_idx))
         if self.policy == "rho-only":
-            return self._assign_rho_only(fi, fj, sizes)
+            if up is None:
+                return self._assign_rho_only(fi, fj, sizes)
+            return self._assign_rho_only_sub(
+                fi, fj, sizes, np.nonzero(up)[0].tolist())
         K = self.rates.shape[0]
-        return self._rng.choice(K, size=fi.size, p=self._p).astype(np.int64)
+        if up is None:
+            return self._rng.choice(K, size=fi.size, p=self._p).astype(np.int64)
+        up_arr = np.nonzero(up)[0]
+        p = self.rates[up_arr] / self.rates[up_arr].sum()
+        ch = self._rng.choice(up_arr.size, size=fi.size, p=p)
+        return up_arr[ch].astype(np.int64)
 
     def _assign_tau_aware(self, fi, fj, sizes) -> np.ndarray:
         """Flat greedy tau-aware choices; mirrors CoreState candidate/assign.
@@ -259,6 +303,93 @@ class FlatAssignState:
             if lj > b:
                 b = lj
             bound[kb] = b
+            choices[t] = kb
+            t += 1
+        return choices
+
+    def _assign_tau_aware_sub(self, fi, fj, sizes, up_idx: list) -> np.ndarray:
+        """Tau-aware choices over a core subset, with per-core delta.
+
+        Expression-for-expression the same IEEE ops as the unrestricted hot
+        loop (``_assign_tau_aware``), scanning only ``up_idx`` (ascending) —
+        with all cores up and no drift the two are bit-identical, and with a
+        core masked the surviving cores' floats match a fresh sub-fabric
+        state's exactly.
+        """
+        cores, bound, deltas = self._cores, self._bound, self._delta_c
+        n_ports = self.n_ports
+        choices = np.empty(fi.size, dtype=np.int64)
+        inf = float("inf")
+        t = 0
+        for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
+            ij = i * n_ports + j
+            best = inf
+            kb = up_idx[0]
+            for k in up_idx:
+                rl, cl, rt, ct, nzk, rk = cores[k]
+                delta = deltas[k]
+                new = 0 if nzk[ij] else 1
+                li = (rl[i] + d) / rk + (rt[i] + new) * delta
+                lj = (cl[j] + d) / rk + (ct[j] + new) * delta
+                b = bound[k]
+                if li > b:
+                    b = li
+                if lj > b:
+                    b = lj
+                if b < best:  # strict: argmin ties -> lowest core index
+                    best = b
+                    kb = k
+            rl, cl, rt, ct, nzk, rk = cores[kb]
+            delta = deltas[kb]
+            if not nzk[ij]:
+                nzk[ij] = 1
+                rt[i] += 1
+                ct[j] += 1
+            rl[i] = rli = rl[i] + d
+            cl[j] = clj = cl[j] + d
+            li = rli / rk + rt[i] * delta
+            lj = clj / rk + ct[j] * delta
+            b = bound[kb]
+            if li > b:
+                b = li
+            if lj > b:
+                b = lj
+            bound[kb] = b
+            choices[t] = kb
+            t += 1
+        return choices
+
+    def _assign_rho_only_sub(self, fi, fj, sizes, up_idx: list) -> np.ndarray:
+        """RHO-ASSIGN choices over a core subset (same ops as the hot loop)."""
+        cores, cur_rho = self._cores, self._rho
+        choices = np.empty(fi.size, dtype=np.int64)
+        inf = float("inf")
+        t = 0
+        for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
+            best = inf
+            kb = up_idx[0]
+            for k in up_idx:
+                rl, cl, rk = cores[k]
+                li = rl[i] + d
+                lj = cl[j] + d
+                c = cur_rho[k]
+                if li > c:
+                    c = li
+                if lj > c:
+                    c = lj
+                c = c / rk
+                if c < best:
+                    best = c
+                    kb = k
+            rl, cl, _rk = cores[kb]
+            rl[i] = rli = rl[i] + d
+            cl[j] = clj = cl[j] + d
+            c = cur_rho[kb]
+            if rli > c:
+                c = rli
+            if clj > c:
+                c = clj
+            cur_rho[kb] = c
             choices[t] = kb
             t += 1
         return choices

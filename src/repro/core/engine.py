@@ -245,12 +245,20 @@ def _event_loop(
     service ticks (see ``FabricState``): a resource is busy until its
     horizon, and every horizon value strictly after ``t0`` is seeded into
     the event heap so the loop wakes exactly when a committed circuit tears
-    down. With no horizons this is the original from-scratch loop.
+    down. ``+inf`` horizons (a failed core's resources, see ``core.fault``)
+    are never seeded — no pending flow references them once the fault
+    machinery has reassigned its strandlings. With no horizons this is the
+    original from-scratch loop.
+
+    ``delta`` is a scalar, or a per-flow ``(F,)`` array when cores have
+    drifted reconfiguration delays (``fault.DeltaDrift``); the scalar path
+    computes the exact same float expressions as before.
     """
     F = rin.size
     t_est = np.full(F, -1.0)
     if F == 0:
         return t_est
+    d_vec = None if np.ndim(delta) == 0 else np.asarray(delta, dtype=np.float64)
     if free_in0 is None:
         free_in = np.full(n_res, t0)
         free_out = np.full(n_res, t0)
@@ -261,9 +269,9 @@ def _event_loop(
     scratch = np.empty(n_res, dtype=np.int64)
     events: list = []  # heap of future completion (and release) times
     if free_in0 is not None:
-        events = np.unique(
-            np.concatenate([free_in[free_in > t0], free_out[free_out > t0]])
-        ).tolist()
+        seed_in = free_in[(free_in > t0) & np.isfinite(free_in)]
+        seed_out = free_out[(free_out > t0) & np.isfinite(free_out)]
+        events = np.unique(np.concatenate([seed_in, seed_out])).tolist()
     remaining = F
     t = t0
     if release is not None:
@@ -302,7 +310,8 @@ def _event_loop(
                 )
                 start = pend[feas]
                 if start.size:
-                    tc = (t + delta) + srv[start]
+                    tc = (t + (delta if d_vec is None else d_vec[start])) \
+                        + srv[start]
                     free_in[rin[start]] = tc
                     free_out[rout[start]] = tc
                     t_est[start] = t
@@ -327,7 +336,7 @@ def _event_loop(
             safe = _first_occurrence(rin[cand], scratch) \
                 & _first_occurrence(rout[cand], scratch)
             start = cand[safe]
-            tc = (t + delta) + srv[start]
+            tc = (t + (delta if d_vec is None else d_vec[start])) + srv[start]
             free_in[rin[start]] = tc
             free_out[rout[start]] = tc
             t_est[start] = t
@@ -370,7 +379,10 @@ def _reserving_times(
     across service ticks; they are MUTATED in place, which is exactly the
     incremental contract — a reservation, once made, never changes, so the
     arrays double as the committed-circuit state.
+
+    ``delta`` may be a per-flow ``(F,)`` array (drifted per-core delays).
     """
+    d_vec = None if np.ndim(delta) == 0 else np.asarray(delta, dtype=np.float64)
     if avail_in is None:
         avail_in = np.zeros(n_res)
         avail_out = np.zeros(n_res)
@@ -380,7 +392,7 @@ def _reserving_times(
         t = avail_in[i] if avail_in[i] >= avail_out[j] else avail_out[j]
         if release is not None and release[f] > t:
             t = release[f]
-        tc = t + delta + srv[f]
+        tc = t + (delta if d_vec is None else d_vec[f]) + srv[f]
         avail_in[i] = tc
         avail_out[j] = tc
         t_est[f] = t
@@ -694,6 +706,13 @@ _PEND_FIELDS = (
     ("rel", np.float64), ("score", np.float64), ("intra", np.int64),
 )
 
+#: Committed-circuit retention (``track_commits``): the pending fields plus
+#: the committed times (what fault classification and horizon rebuilds
+#: read; the delay in force reaches programs via ``TickCommit.delta_f``).
+_COMMIT_FIELDS = _PEND_FIELDS + (
+    ("t_est", np.float64), ("t_comp", np.float64),
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class TickCommit:
@@ -703,6 +722,12 @@ class TickCommit:
     service's coflow identity); ``cid`` echoes the submitted ``Coflow.cid``.
     ``finalized`` lists the coflows whose last flow committed this tick as
     ``(gid, cid, cct, weight)`` tuples — their CCT is now final.
+
+    ``delta_f`` is the per-flow reconfiguration delay in force at commit
+    time (``None`` = the fabric's uniform nominal delta; an array only after
+    a ``fault.DeltaDrift``). ``faults`` lists the ``FaultApplication``
+    records of injector events applied at this tick, and ``unfinalized``
+    the gids whose previously reported final CCT those faults retracted.
     """
 
     t_now: float
@@ -716,6 +741,9 @@ class TickCommit:
     t_complete: np.ndarray   # (Fc,) float64
     finalized: tuple         # ((gid, cid, cct, weight), ...)
     n_pending: int           # flows still tentative after this tick
+    delta_f: np.ndarray | None = None  # (Fc,) float64 when delta drifted
+    faults: tuple = ()       # (FaultApplication, ...) applied this tick
+    unfinalized: tuple = ()  # gids whose final CCT was retracted this tick
 
     @property
     def n_flows(self) -> int:
@@ -746,13 +774,18 @@ class FabricState:
         algorithm: str = "ours",
         scheduling: str = "work-conserving",
         seed: int = 0,
+        faults=None,
+        track_commits: bool | None = None,
     ):
         policy, scheduling = _resolve_algorithm(algorithm, scheduling)
         if scheduling not in INCREMENTAL_SCHEDULINGS:
             raise ValueError(
-                f"incremental scheduling supports {INCREMENTAL_SCHEDULINGS}; "
-                f"{scheduling!r} (algorithm {algorithm!r}) requires a full "
-                f"run_fast_online replay")
+                f"scheduling {scheduling!r} (algorithm {algorithm!r}) is "
+                f"benchmark-only: the sunflow pick-next-at-core-free rule "
+                f"cannot commit tick-by-tick and requires a full "
+                f"run_fast_online replay (serve it via run_fast / "
+                f"run_fast_online / run_batch); incremental scheduling "
+                f"supports {INCREMENTAL_SCHEDULINGS}")
         self.rates = np.asarray(rates, dtype=np.float64)
         if self.rates.ndim != 1 or (self.rates <= 0).any():
             raise ValueError("rates must be a 1-D positive vector")
@@ -780,6 +813,29 @@ class FabricState:
         self._nflows: list[int] = []
         self._ndone: list[int] = []
         self._cct: list[float] = []
+        # -- fault model (core.fault) ---------------------------------------
+        #: scripted fault schedule; ``step`` pops events due at each tick
+        self.faults = faults
+        #: retain committed circuits so faults can classify them; on by
+        #: default whenever an injector is present (FabricManager always
+        #: turns it on so report_fault works). With zero fault events the
+        #: retention changes no computed value — the zero-event injector is
+        #: bit-identical to a plain FabricState (fuzzed in
+        #: tests/test_fault_differential.py).
+        if track_commits is None:
+            track_commits = faults is not None
+        self.track_commits = bool(track_commits)
+        self._commit = (
+            {name: np.zeros(0, dtype=dt) for name, dt in _COMMIT_FIELDS}
+            if self.track_commits else None)
+        self.core_up = np.ones(self.K, dtype=bool)
+        #: per-core reconfiguration delay (DeltaDrift moves entries)
+        self.delta_k = np.full(self.K, self.delta)
+        self._drifted = False
+        #: port-flap blackout floors per (core, port) resource
+        self._flap_in = np.zeros(n_res)
+        self._flap_out = np.zeros(n_res)
+        self.fault_log: list = []  # FaultApplication records, in order
 
     # -- registry views ----------------------------------------------------
     @property
@@ -804,6 +860,181 @@ class FabricState:
     def weights(self) -> np.ndarray:
         return np.asarray(self._weight, dtype=np.float64)
 
+    # -- fault model --------------------------------------------------------
+    def aborted_keys(self) -> set:
+        """Program-segment keys of every circuit aborted by a fault so far
+        (see ``fault.AbortedCircuit.key``) — the stream-wide program must
+        exclude these segments (``service.FabricManager.program`` does)."""
+        return {a.key for app in self.fault_log for a in app.aborted}
+
+    def _rebuild_horizons(self) -> None:
+        """Recompute the committed-circuit horizons from the retained
+        commits, then fold in flap floors and failed-core ``+inf``.
+
+        ``max`` is an exact selection, so the rebuilt values equal what the
+        incremental ``np.maximum.at`` updates accumulated — minus the
+        contributions of circuits a fault just aborted.
+        """
+        n_res = self.K * self.N
+        free_in = np.zeros(n_res)
+        free_out = np.zeros(n_res)
+        c = self._commit
+        if c is not None and c["gid"].size:
+            np.maximum.at(free_in, c["core"] * self.N + c["fi"], c["t_comp"])
+            np.maximum.at(free_out, c["core"] * self.N + c["fj"], c["t_comp"])
+        np.maximum(free_in, self._flap_in, out=free_in)
+        np.maximum(free_out, self._flap_out, out=free_out)
+        down = np.repeat(~self.core_up, self.N)
+        free_in[down] = np.inf
+        free_out[down] = np.inf
+        self.free_in = free_in
+        self.free_out = free_out
+
+    def _requeue(self, moved: dict, t_f: float, bump_release: np.ndarray
+                 ) -> None:
+        """Reassign flows over the up cores and append them to the pending
+        set. ``moved`` holds ``_PEND_FIELDS`` arrays; rows with
+        ``bump_release`` True (aborted in-flight circuits) can restart no
+        earlier than the fault time ``t_f``."""
+        rel = moved["rel"].copy()
+        rel[bump_release] = np.maximum(rel[bump_release], t_f)
+        order = np.lexsort((moved["intra"], moved["gid"]))
+        fi, fj = moved["fi"][order], moved["fj"][order]
+        sizes = moved["size"][order]
+        core = self._assign.assign(fi, fj, sizes, up=self.core_up)
+        add = {
+            "gid": moved["gid"][order], "cid": moved["cid"][order],
+            "fi": fi, "fj": fj, "core": core, "size": sizes,
+            "srv": sizes / self.rates[core], "rel": rel[order],
+            "score": moved["score"][order], "intra": moved["intra"][order],
+        }
+        self._pend = {
+            name: np.concatenate([self._pend[name], add[name]])
+            for name, _dt in _PEND_FIELDS
+        }
+
+    def apply_fault(self, event):
+        """Apply one topology-churn event (see ``core.fault``) right now.
+
+        Committed circuits interrupted by the event are aborted (their
+        demand re-queued, reassigned over the surviving cores, their ports'
+        horizons rolled back), tentative flows stranded on a failed core are
+        reassigned, and retracted final CCTs are reported. Returns the
+        ``FaultApplication`` record; ``step`` calls this for every injector
+        event due at a tick, ``service.FabricManager.report_fault`` for
+        events discovered between ticks.
+        """
+        from .fault import (
+            FAULT_EVENTS,
+            AbortedCircuit,
+            CoreDown,
+            CoreUp,
+            DeltaDrift,
+            FaultApplication,
+            PortFlap,
+        )
+
+        if not isinstance(event, FAULT_EVENTS):
+            raise TypeError(
+                f"unknown fault event {event!r}; one of "
+                f"{[cls.__name__ for cls in FAULT_EVENTS]}")
+        t_f = float(event.t)
+        k = int(event.core)
+        if not 0 <= k < self.K:
+            raise ValueError(f"core {k} out of range for K={self.K}")
+
+        def _done(aborted=(), requeued=0, reassigned=0, unfinalized=()):
+            app = FaultApplication(
+                event=event, aborted=tuple(aborted), requeued=int(requeued),
+                reassigned_pending=int(reassigned),
+                unfinalized=tuple(unfinalized))
+            self.fault_log.append(app)
+            return app
+
+        if isinstance(event, DeltaDrift):
+            self.delta_k[k] = float(event.delta)
+            self._drifted = bool(np.any(self.delta_k != self.delta))
+            self._assign.set_delta(k, float(event.delta))
+            return _done()
+
+        if isinstance(event, CoreUp):
+            if self.core_up[k]:
+                raise ValueError(f"core {k} is already up")
+            self.core_up[k] = True
+            self._rebuild_horizons()
+            return _done()
+
+        # CoreDown / PortFlap must classify the committed circuits.
+        if self._commit is None:
+            raise RuntimeError(
+                "this FabricState was built without commit tracking and "
+                "cannot classify committed circuits on a "
+                f"{type(event).__name__}; rebuild it with "
+                "track_commits=True or a FaultInjector")
+        c = self._commit
+        strand = np.zeros(self._pend["gid"].size, dtype=bool)
+        if isinstance(event, CoreDown):
+            if not self.core_up[k]:
+                raise ValueError(f"core {k} is already down")
+            if self.core_up.sum() == 1:
+                raise RuntimeError(
+                    f"cannot fail core {k}: it is the last core up "
+                    f"(fabric lost)")
+            self.core_up[k] = False
+            # in-flight (or not-yet-established but already programmed)
+            # circuits on the core deliver nothing; completed ones are kept
+            abort = (c["core"] == k) & (c["t_comp"] > t_f)
+            strand = self._pend["core"] == k
+        else:  # PortFlap
+            p = int(event.port)
+            if not 0 <= p < self.N:
+                raise ValueError(f"port {p} out of range for N={self.N}")
+            t_end = float(event.t_end)
+            r = k * self.N + p
+            self._flap_in[r] = max(self._flap_in[r], t_end)
+            self._flap_out[r] = max(self._flap_out[r], t_end)
+            touches = (c["core"] == k) & ((c["fi"] == p) | (c["fj"] == p))
+            abort = touches & (c["t_est"] < t_end) & (c["t_comp"] > t_f)
+
+        aborted_rows = {name: c[name][abort] for name, _dt in _COMMIT_FIELDS}
+        self._commit = {name: c[name][~abort] for name, _dt in _COMMIT_FIELDS}
+        records = tuple(
+            AbortedCircuit(
+                gid=int(aborted_rows["gid"][x]),
+                cid=int(aborted_rows["cid"][x]),
+                i=int(aborted_rows["fi"][x]), j=int(aborted_rows["fj"][x]),
+                core=int(aborted_rows["core"][x]),
+                size=float(aborted_rows["size"][x]),
+                t_establish=float(aborted_rows["t_est"][x]),
+                t_abort=t_f)
+            for x in range(aborted_rows["gid"].size))
+        # registry rollback: a finalized coflow losing a circuit is
+        # un-finalized; its running CCT is recomputed from what survives
+        unfinalized = []
+        gids_ab, counts_ab = np.unique(aborted_rows["gid"],
+                                       return_counts=True)
+        for g, n in zip(gids_ab.tolist(), counts_ab.tolist()):
+            if self._ndone[g] == self._nflows[g]:
+                unfinalized.append(g)
+            self._ndone[g] -= n
+            rem = self._commit["t_comp"][self._commit["gid"] == g]
+            self._cct[g] = float(rem.max()) if rem.size else 0.0
+
+        moved = {
+            name: np.concatenate(
+                [aborted_rows[name], self._pend[name][strand]])
+            for name, _dt in _PEND_FIELDS
+        }
+        self._pend = {name: self._pend[name][~strand]
+                      for name, _dt in _PEND_FIELDS}
+        if moved["gid"].size:
+            bump = np.zeros(moved["gid"].size, dtype=bool)
+            bump[:aborted_rows["gid"].size] = True
+            self._requeue(moved, t_f, bump)
+        self._rebuild_horizons()
+        return _done(aborted=records, requeued=aborted_rows["gid"].size,
+                     reassigned=int(strand.sum()), unfinalized=unfinalized)
+
     # -- admission + scheduling -------------------------------------------
     def _admit(self, coflows, releases: np.ndarray) -> dict:
         """Register a batch and return its pending-flow arrays in
@@ -821,9 +1052,13 @@ class FabricState:
                     f"coflow {c.cid} has N={c.n_ports}, fabric has N={self.N}")
         # the batch's WSPT scores, through the one shared definition (scores
         # are per-coflow, so the batch sub-instance computes the same floats
-        # the full-stream replay would)
+        # the full-stream replay would). Scores price the *surviving* fabric
+        # (R over up cores): with a core down from t=0 this is exactly the
+        # (K-1)-core instance's score, which the fault differential relies
+        # on; with every core up the masked view holds the same floats.
         scores = priority_scores(Instance(
-            coflows=tuple(coflows), rates=self.rates, delta=self.delta))
+            coflows=tuple(coflows), rates=self.rates[self.core_up],
+            delta=self.delta))
         for c, r in zip(coflows, releases):
             self._cid.append(int(c.cid))
             self._weight.append(float(c.weight))
@@ -836,7 +1071,9 @@ class FabricState:
         inst_b = Instance(coflows=batch, rates=self.rates, delta=self.delta)
         pos, cid, fi, fj, sizes = extract_flows(inst_b, np.arange(B))
         gid = gid0 + order[pos]
-        core = self._assign.assign(fi, fj, sizes)
+        core = self._assign.assign(
+            fi, fj, sizes,
+            up=None if self.core_up.all() else self.core_up)
         srv = sizes / self.rates[core]
         counts = np.bincount(pos, minlength=B)
         starts = np.cumsum(counts) - counts
@@ -874,6 +1111,15 @@ class FabricState:
                 raise ValueError(
                     f"cannot admit a coflow released at {releases.max()} at "
                     f"tick t={t_now}; queue it until its release")
+        # Topology churn due at this tick is applied after argument
+        # validation (so a rejected batch consumes no injector events) and
+        # BEFORE admission: the control plane learns of a fault when it
+        # wakes, so this tick's arrivals are assigned over the surviving
+        # cores and the tentative schedule below is re-derived for them.
+        fault_apps = ()
+        if self.faults is not None:
+            fault_apps = tuple(
+                self.apply_fault(ev) for ev in self.faults.pop_due(t_now))
         t_prev = self.t_now
         if len(coflows):
             batch = self._admit(coflows, releases)
@@ -886,11 +1132,15 @@ class FabricState:
         n_res = self.K * self.N
         rin = pend["core"] * self.N + pend["fi"]
         rout = pend["core"] * self.N + pend["fj"]
+        # per-flow reconfiguration delay; scalar fast path unless a
+        # DeltaDrift moved some core off the nominal delta
+        dl_f = None if not self._drifted else self.delta_k[pend["core"]]
         if self.scheduling == "reserving":
             # Reservations commit immediately in arrival order and never
             # move, so the horizon arrays ARE the reservation state.
             t_est = _reserving_times(
-                rin, rout, pend["srv"], self.delta, n_res,
+                rin, rout, pend["srv"],
+                self.delta if dl_f is None else dl_f, n_res,
                 release=pend["rel"], avail_in=self.free_in,
                 avail_out=self.free_out)
             commit = np.ones(t_est.size, dtype=bool)
@@ -901,17 +1151,28 @@ class FabricState:
             perm = np.lexsort((pend["intra"], pend["gid"], -pend["score"]))
             te = _event_loop(
                 rin[perm], rout[perm], pend["srv"][perm], pend["core"][perm],
-                self.delta, n_res, self.N, t0=t_prev,
+                self.delta if dl_f is None else dl_f[perm], n_res, self.N,
+                t0=t_prev,
                 guard=(self.scheduling == "priority-guard"),
                 release=pend["rel"][perm],
                 free_in0=self.free_in, free_out0=self.free_out)
             t_est = np.empty_like(te)
             t_est[perm] = te
             commit = t_est <= t_now
-        tc = (t_est[commit] + self.delta) + pend["srv"][commit]
+        if dl_f is None:
+            tc = (t_est[commit] + self.delta) + pend["srv"][commit]
+        else:
+            tc = (t_est[commit] + dl_f[commit]) + pend["srv"][commit]
         if self.scheduling != "reserving":
             np.maximum.at(self.free_in, rin[commit], tc)
             np.maximum.at(self.free_out, rout[commit], tc)
+        if self.track_commits:
+            newc = {name: pend[name][commit] for name, _dt in _PEND_FIELDS}
+            newc["t_est"] = t_est[commit]
+            newc["t_comp"] = tc
+            self._commit = {
+                name: np.concatenate([self._commit[name], newc[name]])
+                for name, _dt in _COMMIT_FIELDS}
         finalized = []
         for g, v in zip(pend["gid"][commit].tolist(), tc.tolist()):
             self._ndone[g] += 1
@@ -933,6 +1194,10 @@ class FabricState:
             t_establish=t_est[commit], t_complete=tc,
             finalized=tuple(finalized),
             n_pending=int((~commit).sum()),
+            delta_f=None if dl_f is None else dl_f[commit],
+            faults=fault_apps,
+            unfinalized=tuple(
+                g for app in fault_apps for g in app.unfinalized),
         )
         self._pend = {name: pend[name][~commit] for name, _dt in _PEND_FIELDS}
         self.t_now = t_now

@@ -61,7 +61,14 @@ def _check_exclusivity(core, port, t_est, t_comp, n_ports: int,
         )
 
 
-def validate(s: Schedule, releases: np.ndarray | None = None) -> None:
+def validate(s: Schedule, releases: np.ndarray | None = None,
+             flow_delta: np.ndarray | None = None) -> None:
+    """``flow_delta`` (per flow, aligned with ``s.flows``) overrides the
+    instance's uniform reconfiguration delay in the timing checks — the
+    fault model's ``DeltaDrift`` gives cores individual delays, recorded
+    per circuit segment (``service.CircuitProgram.delta_seg``). All other
+    checks (exclusivity, conservation, CCTs, releases) are delay-agnostic.
+    """
     inst = s.inst
     F = len(s.flows)
     if F:
@@ -89,14 +96,16 @@ def validate(s: Schedule, releases: np.ndarray | None = None) -> None:
                     f"{int(orig[b])}'s release {rel[orig[b]]!r}")
 
         # --- 2. timing / non-preemption -----------------------------------
+        dl = (inst.delta if flow_delta is None
+              else np.asarray(flow_delta, dtype=np.float64))
         bad = t_est < -_EPS
         if bad.any():
             raise AssertionError(f"flow {s.flows[_first_bad(bad)]} scheduled before t=0")
-        bad = np.abs(t_start - (t_est + inst.delta)) > _EPS
+        bad = np.abs(t_start - (t_est + dl)) > _EPS
         if bad.any():
             raise AssertionError(
                 f"flow {s.flows[_first_bad(bad)]} violates start = establish + delta")
-        bad = np.abs(t_comp - (t_est + inst.delta + size / inst.rates[core])) > _EPS
+        bad = np.abs(t_comp - (t_est + dl + size / inst.rates[core])) > _EPS
         if bad.any():
             raise AssertionError(
                 f"flow {s.flows[_first_bad(bad)]} violates non-preemptive duration")

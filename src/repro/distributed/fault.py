@@ -75,12 +75,40 @@ class ElasticTrainer:
       step_fn(state, batch) -> (state, metrics)
       make_state()          -> fresh state pytree (on that mesh)
       shardings_of(state)   -> matching NamedSharding tree (for restore)
+
+    Fabric wiring (one-story device loss): pass ``fabric`` (a
+    ``service.FabricManager``) and ``mesh_cores`` — ``mesh_cores[i]`` is the
+    set of OCS core ids serving ``meshes[i]``. When a ``DeviceLoss`` shrinks
+    the mesh, the cores that only the larger mesh used are reported down to
+    the fabric (``report_fault(CoreDown(...))``, at the fabric stream's
+    current time): in-flight circuits on them are aborted and re-queued over
+    the survivors, affected program-cache entries are purged, and the next
+    fabric tick re-derives the tentative schedule — the compute plane and
+    the circuit plane degrade together. ``grow()`` reports the cores back up.
     """
 
     def __init__(self, build: Callable, meshes: list, ckpt_dir: str,
-                 *, ckpt_every: int = 10, watchdog: StepWatchdog | None = None):
+                 *, ckpt_every: int = 10, watchdog: StepWatchdog | None = None,
+                 fabric=None, mesh_cores: list | None = None):
         from repro.distributed.checkpoint import AsyncCheckpointer
 
+        if (fabric is None) != (mesh_cores is None):
+            raise ValueError("fabric and mesh_cores go together")
+        if mesh_cores is not None:
+            if len(mesh_cores) != len(meshes):
+                raise ValueError(
+                    f"mesh_cores must map every mesh: got {len(mesh_cores)} "
+                    f"entries for {len(meshes)} meshes")
+            # the fallback chain must be nested: shrinking may only take
+            # cores DOWN (a non-subset chain would report a core "up" that
+            # never went down, mid-recovery, and kill the recovery itself)
+            for i in range(len(mesh_cores) - 1):
+                extra = set(mesh_cores[i + 1]) - set(mesh_cores[i])
+                if extra:
+                    raise ValueError(
+                        f"mesh_cores must be a nested fallback chain; "
+                        f"entry {i + 1} adds cores {sorted(extra)} not in "
+                        f"entry {i}")
         self.build = build
         self.meshes = meshes  # ordered largest -> smallest fallback chain
         self.mesh_idx = 0
@@ -88,6 +116,8 @@ class ElasticTrainer:
         self.ckpt_every = ckpt_every
         self.watchdog = watchdog or StepWatchdog()
         self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.fabric = fabric
+        self.mesh_cores = mesh_cores
         self.events: list[dict] = []
         self._setup()
 
@@ -97,6 +127,24 @@ class ElasticTrainer:
 
     def _setup(self):
         self.step_fn, self.make_state, self.shardings_of = self.build(self.mesh)
+
+    def _sync_fabric(self, prev_idx: int):
+        """Shrink/grow the circuit plane to match the new mesh's core set."""
+        if self.fabric is None or prev_idx == self.mesh_idx:
+            return
+        from repro.core.fault import CoreDown, CoreUp
+
+        t = float(self.fabric.state.t_now)
+        prev = set(self.mesh_cores[prev_idx])
+        cur = set(self.mesh_cores[self.mesh_idx])
+        for k in sorted(prev - cur):
+            rep = self.fabric.report_fault(CoreDown(t=t, core=k))
+            self.events.append({"event": "fabric-core-down", "core": k,
+                                "aborted": rep.aborted,
+                                "requeued": rep.requeued})
+        for k in sorted(cur - prev):
+            self.fabric.report_fault(CoreUp(t=t, core=k))
+            self.events.append({"event": "fabric-core-up", "core": k})
 
     def _restore_or_init(self, step_hint: int | None = None):
         from repro.distributed.checkpoint import latest_step, restore_checkpoint
@@ -110,17 +158,22 @@ class ElasticTrainer:
         return state, last
 
     def shrink(self):
-        """Drop to the next-smaller mesh in the fallback chain."""
+        """Drop to the next-smaller mesh in the fallback chain (and shrink
+        the circuit plane with it when a fabric is wired)."""
         if self.mesh_idx + 1 >= len(self.meshes):
             raise RuntimeError("no smaller mesh available — cluster lost")
+        prev = self.mesh_idx
         self.mesh_idx += 1
         self.events.append({"event": "shrink", "to": dict(self.mesh.shape)})
+        self._sync_fabric(prev)
         self._setup()
 
     def grow(self):
         if self.mesh_idx > 0:
+            prev = self.mesh_idx
             self.mesh_idx -= 1
             self.events.append({"event": "grow", "to": dict(self.mesh.shape)})
+            self._sync_fabric(prev)
             self._setup()
 
     def run(self, batches, *, start_state=None, max_steps: int | None = None,

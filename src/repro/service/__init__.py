@@ -5,13 +5,18 @@ The control-plane layer that *operates* the scheduling engine continuously:
 
   - ``admission``  — bounded request queue, micro-batching, backpressure;
   - ``manager``    — :class:`FabricManager`, the service loop (streaming
-    ticks over ``core.engine.FabricState`` + cached one-shot scheduling);
+    ticks over ``core.engine.FabricState`` + cached one-shot scheduling +
+    the fault plane: :meth:`FabricManager.report_fault` applies topology
+    churn from ``core.fault``, emits corrective teardown events, and purges
+    affected cache entries);
   - ``program``    — :class:`CircuitProgram` establish/teardown artifacts,
     self-validating through ``core.simulator.validate``;
   - ``cache``      — canonical instance hashing + LRU program cache.
 
-See ``examples/serve_fabric.py`` for the end-to-end loop and
-``benchmarks/bench_service.py`` for the load harness.
+See ``examples/serve_fabric.py`` for the end-to-end loop,
+``examples/fault_recovery.py`` for fault injection + verified reschedule,
+``benchmarks/bench_service.py`` for the load harness, and
+``benchmarks/bench_fault.py`` for recovery latency / degraded throughput.
 """
 from .admission import (  # noqa: F401
     AdmissionQueue,
@@ -19,7 +24,12 @@ from .admission import (  # noqa: F401
     BackpressureError,
 )
 from .cache import ProgramCache, instance_key  # noqa: F401
-from .manager import FabricConfig, FabricManager, TickReport  # noqa: F401
+from .manager import (  # noqa: F401
+    FabricConfig,
+    FabricManager,
+    FaultReport,
+    TickReport,
+)
 from .program import (  # noqa: F401
     CircuitEvent,
     CircuitProgram,

@@ -31,6 +31,7 @@ def instance_key(
     scheduling: str = "work-conserving",
     seed: int = 0,
     backend: str = "numpy",
+    fabric: str = "",
 ) -> str:
     """Canonical content hash of one scheduling request.
 
@@ -40,9 +41,17 @@ def instance_key(
     is deliberately EXCLUDED — it is a label, read by nothing in the
     pipeline, and including it would miss the repeated-pattern hits this
     cache exists for.
+
+    ``fabric`` is an extra fabric-condition fingerprint (empty on a healthy
+    fabric, so healthy keys are unchanged): a degraded fabric — cores down
+    after a ``core.fault.CoreDown`` — schedules over the survivors only, and
+    its programs must never collide with healthy-fabric (or differently
+    degraded) entries.
     """
     h = hashlib.sha256()
     h.update(f"{algorithm}|{scheduling}|{seed}|{backend}|".encode())
+    if fabric:
+        h.update(f"fabric={fabric}|".encode())
     h.update(f"M={inst.M},N={inst.N},K={inst.K},delta={inst.delta!r}".encode())
     h.update(np.ascontiguousarray(inst.rates).tobytes())
     h.update(np.ascontiguousarray(inst.weights).tobytes())
@@ -89,6 +98,16 @@ class ProgramCache:
         self._store.move_to_end(key)
         while len(self._store) > self.capacity:
             self._store.popitem(last=False)
+
+    def invalidate(self, pred) -> int:
+        """Drop every entry whose value satisfies ``pred``; returns the
+        count. The fault path uses this to purge programs that matched
+        circuits through a core that just failed — they must never be
+        served again, not even to a submission hashing to their key."""
+        doomed = [k for k, v in self._store.items() if pred(v)]
+        for k in doomed:
+            del self._store[k]
+        return len(doomed)
 
     @property
     def hit_rate(self) -> float:

@@ -43,13 +43,15 @@ from repro.core.engine import (
 from .admission import AdmissionQueue, ArrivalRequest, BackpressureError
 from .cache import ProgramCache, instance_key
 from .program import (
+    CircuitEvent,
     CircuitProgram,
     compile_commit,
     compile_schedule,
     merge_programs,
 )
 
-__all__ = ["FabricConfig", "TickReport", "FabricManager", "BackpressureError"]
+__all__ = ["FabricConfig", "TickReport", "FaultReport", "FabricManager",
+           "BackpressureError"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +76,11 @@ class FabricConfig:
     #: Sliding window of per-coflow decision-latency samples for the
     #: p50/p99 telemetry.
     max_latency_samples: int = 65536
+    #: Scripted topology churn (a ``core.fault.FaultInjector``): events are
+    #: applied at the first tick at or after their timestamp. Faults
+    #: discovered out-of-band go through :meth:`FabricManager.report_fault`
+    #: instead.
+    faults: object | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +95,21 @@ class TickReport:
     queue_depth: int       # requests still queued after the tick
     wall_s: float          # tick wall-clock
     program: CircuitProgram
+    aborted: int = 0       # circuits torn down by faults applied this tick
+    unfinalized: int = 0   # final CCTs retracted by those faults
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultReport:
+    """One applied fault event plus the corrective actions it triggered."""
+
+    event: object            # the core.fault event
+    teardowns: tuple         # corrective CircuitEvent teardown actions
+    aborted: int             # committed circuits torn down
+    requeued: int            # flows re-queued as residual demand
+    reassigned_pending: int  # tentative flows moved off the affected core
+    unfinalized: tuple       # gids whose final CCT was retracted
+    cache_purged: int        # one-shot cache entries invalidated
 
 
 class FabricManager:
@@ -99,10 +121,14 @@ class FabricManager:
                 f"service scheduling must be incremental "
                 f"({INCREMENTAL_SCHEDULINGS}), got {config.scheduling!r}")
         self.config = config
+        # commit tracking is always on for a managed fabric: report_fault
+        # must be able to classify committed circuits at any moment
         self.state = FabricState(
             rates=np.asarray(config.rates, dtype=np.float64),
             delta=config.delta, N=config.N, algorithm=config.algorithm,
-            scheduling=config.scheduling, seed=config.seed)
+            scheduling=config.scheduling, seed=config.seed,
+            faults=config.faults, track_commits=True)
+        self.fault_reports: list[FaultReport] = []
         self.queue = AdmissionQueue(max_depth=config.max_queue_depth)
         self.cache = ProgramCache(capacity=config.cache_capacity)
         self.reports: "deque[TickReport]" = deque(
@@ -152,6 +178,8 @@ class FabricManager:
             raise
         for off, r in enumerate(admitted):
             self._submitted_s[gid0 + off] = r.submitted_s
+        for app in commit.faults:  # scripted churn applied at this tick
+            self._register_fault(app)
         program = compile_commit(commit, self.state.rates, self.state.delta,
                                  self.state.N)
         if self.config.validate_every_tick:
@@ -159,12 +187,19 @@ class FabricManager:
         end = time.perf_counter()
         self._n_finalized += len(commit.finalized)
         for fin in commit.finalized:
-            self.latencies_s.append(end - self._submitted_s.pop(fin[0], end))
+            # a fault-retracted coflow re-finalizing here has no pending
+            # submission stamp (popped at its first finalization) — skip the
+            # sample rather than record a bogus 0.0 latency
+            sub = self._submitted_s.pop(fin[0], None)
+            if sub is not None:
+                self.latencies_s.append(end - sub)
         report = TickReport(
             t_now=float(t_now), admitted=len(admitted),
             committed_flows=commit.n_flows, finalized=len(commit.finalized),
             pending_flows=commit.n_pending, queue_depth=self.queue.depth,
-            wall_s=end - t0, program=program)
+            wall_s=end - t0, program=program,
+            aborted=sum(app.n_aborted for app in commit.faults),
+            unfinalized=len(commit.unfinalized))
         self.reports.append(report)
         self._n_ticks += 1
         self._flows_committed += commit.n_flows
@@ -181,12 +216,55 @@ class FabricManager:
                           np.nextafter(self.state.t_now, np.inf)))
         return self.tick(np.inf)
 
+    # -- fault plane --------------------------------------------------------
+    def _register_fault(self, app) -> FaultReport:
+        """Turn one ``FaultApplication`` into its corrective actions: emit
+        teardown events for every aborted circuit, retract retracted final
+        CCTs from the counters, and purge one-shot cache entries that
+        matched circuits through a failed core."""
+        from repro.core.fault import CoreDown
+
+        self._n_finalized -= len(app.unfinalized)
+        teardowns = tuple(
+            CircuitEvent(t=float(a.t_abort), core=a.core, kind="teardown",
+                         ingress=a.i, egress=a.j, cid=a.gid)
+            for a in app.aborted)
+        purged = 0
+        if isinstance(app.event, CoreDown):
+            k = int(app.event.core)
+            purged = self.cache.invalidate(
+                lambda prog: bool(np.any(prog.core == k)))
+        report = FaultReport(
+            event=app.event, teardowns=teardowns, aborted=app.n_aborted,
+            requeued=app.requeued,
+            reassigned_pending=app.reassigned_pending,
+            unfinalized=app.unfinalized, cache_purged=purged)
+        self.fault_reports.append(report)
+        return report
+
+    def report_fault(self, event) -> FaultReport:
+        """Apply one topology-churn event (``core.fault``) right now.
+
+        The event is applied to the incremental state immediately — commits
+        on the affected core are classified, in-flight circuits aborted and
+        re-queued, the next ``tick`` re-derives the tentative schedule over
+        the survivors — and the corrective actions are returned: teardown
+        events for the switches, retracted finalizations, purged cache
+        entries. Events timestamped in the past model late discovery.
+        """
+        return self._register_fault(self.state.apply_fault(event))
+
     def program(self) -> CircuitProgram:
-        """The merged circuit program across the retained tick history (the
-        whole stream unless ``max_history_ticks`` trimmed it)."""
-        return merge_programs([r.program for r in self.reports],
-                              self.state.rates, self.state.delta,
-                              self.state.N)
+        """The merged program of record across the retained tick history
+        (the whole stream unless ``max_history_ticks`` trimmed it).
+        Circuits aborted by faults are excluded: their bytes were re-served
+        by later commits, and their stale intervals must not collide with a
+        recovered core's new circuits (the corrective teardown events in
+        ``fault_reports`` are the audit trail of the aborts)."""
+        merged = merge_programs([r.program for r in self.reports],
+                                self.state.rates, self.state.delta,
+                                self.state.N)
+        return merged.drop(self.state.aborted_keys())
 
     def ccts(self) -> np.ndarray:
         """Per-coflow CCTs by admission id (final for finalized coflows)."""
@@ -214,8 +292,17 @@ class FabricManager:
         releases = None
         if isinstance(inst, OnlineInstance):
             inst, releases = inst.inst, inst.releases
+        # A degraded fabric (cores down) schedules over the survivors only;
+        # the up-mask fingerprint keeps degraded programs from ever hitting
+        # healthy-fabric cache entries (and vice versa). Healthy keys are
+        # byte-identical to the pre-fault scheme.
+        up = self.state.core_up
+        degraded = not bool(up.all())
+        fingerprint = ("" if not degraded
+                       else "up=" + "".join("1" if u else "0" for u in up))
         key = instance_key(inst, releases, algorithm=algorithm,
-                           scheduling=scheduling, seed=seed, backend=backend)
+                           scheduling=scheduling, seed=seed, backend=backend,
+                           fabric=fingerprint)
         # The cache stores programs labeled by coflow INDEX (canonical: the
         # key excludes cid labels, so a hit may come from a submission with
         # different cids); relabel to this caller's ids with one lookup.
@@ -223,15 +310,32 @@ class FabricManager:
         canonical = self.cache.get(key)
         hit = canonical is not None
         if not hit:
+            run_inst = inst
+            up_idx = None
+            if degraded:
+                if inst.K != self.state.K:
+                    raise ValueError(
+                        f"instance has K={inst.K} cores but the degraded "
+                        f"fabric has K={self.state.K}; cannot mask")
+                up_idx = np.nonzero(up)[0]
+                run_inst = Instance(coflows=inst.coflows,
+                                    rates=inst.rates[up_idx],
+                                    delta=inst.delta)
             if releases is None:
-                s = run_fast(inst, algorithm, seed=seed,
+                s = run_fast(run_inst, algorithm, seed=seed,
                              scheduling=scheduling, backend=backend)
             else:
                 s = run_fast_online(
-                    OnlineInstance(inst=inst, releases=releases),
+                    OnlineInstance(inst=run_inst, releases=releases),
                     algorithm, seed=seed, scheduling=scheduling,
                     backend=backend)
             canonical = compile_schedule(s, index_labels=True)
+            if degraded:
+                # back to physical core labels + the full-fabric rate vector
+                # (up_idx is monotone, so the canonical sort order holds)
+                canonical = dataclasses.replace(
+                    canonical, rates=np.asarray(inst.rates, dtype=np.float64),
+                    core=up_idx[canonical.core])
         program = dataclasses.replace(canonical, cid=sub_cids[canonical.cid])
         if not hit:
             if self.config.validate_every_tick:
@@ -272,4 +376,8 @@ class FabricManager:
             "cache_hits": self.cache.hits,
             "cache_misses": self.cache.misses,
             "cache_hit_rate": self.cache.hit_rate,
+            "cores_up": int(self.state.core_up.sum()),
+            "faults_applied": len(self.state.fault_log),
+            "circuits_aborted": sum(r.aborted for r in self.fault_reports),
+            "flows_requeued": sum(r.requeued for r in self.fault_reports),
         }

@@ -65,6 +65,10 @@ class CircuitProgram:
     size: np.ndarray         # (S,) float64 — bytes carried
     t_establish: np.ndarray  # (S,) float64
     t_complete: np.ndarray   # (S,) float64
+    #: per-segment reconfiguration delay in force at establishment (fault
+    #: model: ``core.fault.DeltaDrift`` gives cores individual delays);
+    #: ``None`` means the uniform nominal ``delta``.
+    delta_seg: np.ndarray | None = None
 
     @classmethod
     def empty(cls, rates, delta: float, N: int) -> "CircuitProgram":
@@ -105,20 +109,15 @@ class CircuitProgram:
         """Segment indices per core (already time-ordered within a core)."""
         return {k: np.nonzero(self.core == k)[0] for k in range(self.K)}
 
+    def seg_delta(self) -> np.ndarray:
+        """Per-segment reconfiguration delay, materialized."""
+        if self.delta_seg is not None:
+            return self.delta_seg
+        return np.full(self.n_segments, self.delta)
+
     def merge(self, other: "CircuitProgram") -> "CircuitProgram":
         """Concatenate two programs (e.g. successive service ticks)."""
-        if (self.N != other.N or self.delta != other.delta
-                or not np.array_equal(self.rates, other.rates)):
-            raise ValueError("cannot merge programs for different fabrics")
-        return _sorted_program(
-            self.rates, self.delta, self.N,
-            np.concatenate([self.core, other.core]),
-            np.concatenate([self.ingress, other.ingress]),
-            np.concatenate([self.egress, other.egress]),
-            np.concatenate([self.cid, other.cid]),
-            np.concatenate([self.size, other.size]),
-            np.concatenate([self.t_establish, other.t_establish]),
-            np.concatenate([self.t_complete, other.t_complete]))
+        return merge_programs([self, other], self.rates, self.delta, self.N)
 
     def as_schedule(self) -> Schedule:
         """Rebuild a ``Schedule`` for the instance the program itself serves.
@@ -147,44 +146,79 @@ class CircuitProgram:
         inst = Instance(coflows=coflows, rates=self.rates, delta=self.delta)
         ccts = np.zeros(uniq.size)
         np.maximum.at(ccts, pos, self.t_complete)
+        dl = self.seg_delta()
         flows = [
             ScheduledFlow(
                 coflow=int(pos[s]), cid=int(self.cid[s]),
                 i=int(self.ingress[s]), j=int(self.egress[s]),
                 core=int(self.core[s]), size=float(self.size[s]),
                 t_establish=float(self.t_establish[s]),
-                t_start=float(self.t_establish[s]) + self.delta,
+                t_start=float(self.t_establish[s]) + float(dl[s]),
                 t_complete=float(self.t_complete[s]))
             for s in range(self.n_segments)
         ]
         return Schedule(inst=inst, pi=np.arange(uniq.size), assignment=None,
                         flows=flows, ccts=ccts)
 
+    def drop(self, keys: set) -> "CircuitProgram":
+        """Remove the segments whose ``(cid, ingress, egress, core,
+        t_establish)`` identity is in ``keys`` — the aborted-circuit keys of
+        the fault model (``engine.FabricState.aborted_keys``). The aborted
+        establishments physically happened and are audited by the corrective
+        teardown events; the *program of record* excludes them so that bytes
+        are accounted exactly once and a recovered core's new circuits never
+        collide with stale intervals."""
+        if not keys:
+            return self
+        keep = np.array([
+            (int(self.cid[s]), int(self.ingress[s]), int(self.egress[s]),
+             int(self.core[s]), float(self.t_establish[s])) not in keys
+            for s in range(self.n_segments)], dtype=bool)
+        if keep.all():
+            return self
+        dseg = None if self.delta_seg is None else self.delta_seg[keep]
+        return dataclasses.replace(
+            self, core=self.core[keep], ingress=self.ingress[keep],
+            egress=self.egress[keep], cid=self.cid[keep],
+            size=self.size[keep], t_establish=self.t_establish[keep],
+            t_complete=self.t_complete[keep], delta_seg=dseg)
+
     def validate(self) -> None:
         """Run the independent referee on this program."""
         from repro.core.simulator import validate
 
-        validate(self.as_schedule())
+        validate(self.as_schedule(), flow_delta=self.delta_seg)
 
 
 def merge_programs(programs, rates, delta: float, N: int) -> CircuitProgram:
     """Concatenate any number of programs for one fabric (re-sorted)."""
+    programs = list(programs)
     if not programs:
         return CircuitProgram.empty(rates, delta, N)
+    rates = np.asarray(rates, dtype=np.float64)
+    for p in programs:
+        if (p.N != int(N) or p.delta != float(delta)
+                or not np.array_equal(p.rates, rates)):
+            raise ValueError("cannot merge programs for different fabrics")
     cat = lambda attr: np.concatenate([getattr(p, attr) for p in programs])
+    if any(p.delta_seg is not None for p in programs):
+        dseg = np.concatenate([p.seg_delta() for p in programs])
+    else:
+        dseg = None
     return _sorted_program(rates, delta, N, cat("core"), cat("ingress"),
                            cat("egress"), cat("cid"), cat("size"),
-                           cat("t_establish"), cat("t_complete"))
+                           cat("t_establish"), cat("t_complete"), dseg)
 
 
 def _sorted_program(rates, delta, N, core, ingress, egress, cid, size,
-                    t_est, t_comp) -> CircuitProgram:
+                    t_est, t_comp, delta_seg=None) -> CircuitProgram:
     order = np.lexsort((ingress, t_est, core))
     return CircuitProgram(
         rates=np.asarray(rates, dtype=np.float64), delta=float(delta),
         N=int(N), core=core[order], ingress=ingress[order],
         egress=egress[order], cid=cid[order], size=size[order],
-        t_establish=t_est[order], t_complete=t_comp[order])
+        t_establish=t_est[order], t_complete=t_comp[order],
+        delta_seg=None if delta_seg is None else delta_seg[order])
 
 
 def compile_commit(commit, rates, delta: float, N: int) -> CircuitProgram:
@@ -192,11 +226,12 @@ def compile_commit(commit, rates, delta: float, N: int) -> CircuitProgram:
 
     The program's ``cid`` field carries the stream admission id
     (``TickCommit.gid``) — the service's coflow identity, unique across the
-    stream even when submitted ``Coflow.cid`` values collide.
+    stream even when submitted ``Coflow.cid`` values collide. A drifted
+    tick's per-flow delays ride along as ``delta_seg``.
     """
     return _sorted_program(rates, delta, N, commit.core, commit.fi, commit.fj,
                            commit.gid, commit.size, commit.t_establish,
-                           commit.t_complete)
+                           commit.t_complete, commit.delta_f)
 
 
 def compile_schedule(s: Schedule, *, index_labels: bool = False) -> CircuitProgram:

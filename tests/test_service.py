@@ -101,10 +101,45 @@ def test_fabric_state_rejects_late_and_future_arrivals():
         st.step((), (), 1.0)
 
 
-def test_fabric_state_rejects_sunflow():
+def test_sunflow_is_benchmark_only_in_the_service():
+    """ROADMAP resolution: the sunflow baselines pick the next coflow at
+    core-free time — a decision later arrivals can overturn arbitrarily far
+    in the future — so they cannot commit tick-by-tick. They are marked
+    benchmark-only with a pinned error in both FabricState and
+    FabricManager (replay entry points still serve them, next test)."""
+    for algorithm in ("sunflow-core", "rand-sunflow"):
+        with pytest.raises(ValueError, match="benchmark-only"):
+            FabricState(rates=np.array(RATES), delta=1.0, N=4,
+                        algorithm=algorithm)
+    # the historical phrasing stays pinned too (docs/messages link to it)
     with pytest.raises(ValueError, match="full run_fast_online replay"):
         FabricState(rates=np.array(RATES), delta=1.0, N=4,
                     algorithm="sunflow-core")
+    with pytest.raises(ValueError, match="sunflow"):
+        FabricState(rates=np.array(RATES), delta=1.0, N=4,
+                    scheduling="sunflow")
+    with pytest.raises(ValueError, match="work-conserving"):
+        FabricManager(FabricConfig(rates=RATES, delta=1.0, N=4,
+                                   scheduling="sunflow"))
+
+
+def test_sunflow_replay_path_still_serves():
+    """The full-replay entry points (the benchmark path) schedule the
+    sunflow baselines end to end, online and offline, and the result passes
+    the independent referee."""
+    from repro.core import run_fast, validate
+
+    oinst = _stream(M=10, seed=12, span_factor=1.0)
+    s = run_fast_online(oinst, "sunflow-core")
+    validate(s, releases=oinst.releases)
+    s2 = run_fast(oinst.inst, "rand-sunflow", seed=3)
+    validate(s2)
+    # the service's ONE-SHOT plane is a full replay, so it serves sunflow
+    # too (only the tick-committing streaming plane cannot)
+    mgr = FabricManager(FabricConfig(rates=RATES, delta=8.0, N=12))
+    program, _hit = mgr.schedule_instance(oinst.inst,
+                                          algorithm="sunflow-core")
+    program.validate()
 
 
 def test_chunked_random_assignment_matches_one_shot():
