@@ -51,6 +51,7 @@ def main(argv=None) -> int:
         bench_assignment,
         bench_core_scaling,
         bench_fault,
+        bench_overload,
         bench_service,
         comm_planner,
         common,
@@ -90,6 +91,9 @@ def main(argv=None) -> int:
          dict(n_ticks=24 if args.full else 16)),
         ("fault", bench_fault.main,
          dict(M=360 if args.full else 240, n_ticks=16)),
+        ("overload", bench_overload.main,
+         dict(M=400 if args.full else 300, n_ticks=40 if args.full else 30,
+              loads=(0.5, 1.0, 1.5, 2.0) if args.full else (0.5, 1.0, 2.0))),
         ("roofline", roofline_report.main, {}),
     ]
     known = [name for name, _fn, _kw in sections] + ["comm_planner"]

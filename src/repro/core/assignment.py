@@ -213,6 +213,35 @@ class FlatAssignState:
         self._delta_c[int(core)] = float(delta)
         self._drifted = any(d != self.delta for d in self._delta_c)
 
+    def reset_core(self, core: int) -> None:
+        """Fault model (``CoreUp``): forget core ``core``'s accumulated load.
+
+        A core that went down delivered nothing while dark and its
+        interrupted circuits were re-queued onto the survivors, so on
+        recovery its true outstanding load is zero. Without the reset the
+        greedy policies keep pricing the recovered core with its pre-failure
+        history and under-use it indefinitely; with it, the core is the
+        cheapest candidate until its fresh load catches up with the
+        survivors' — the fabric converges back toward the healthy mix. The
+        drifted per-core delay is hardware state, not load, and is kept.
+        The random policy is load-blind: nothing to reset.
+        """
+        k = int(core)
+        if not 0 <= k < self.rates.shape[0]:
+            raise ValueError(
+                f"core {k} out of range for K={self.rates.shape[0]}")
+        n_ports = self.n_ports
+        if self.policy == "tau-aware":
+            self._cores[k] = (
+                [0.0] * n_ports, [0.0] * n_ports, [0] * n_ports,
+                [0] * n_ports, bytearray(n_ports * n_ports),
+                float(self.rates[k]))
+            self._bound[k] = 0.0
+        elif self.policy == "rho-only":
+            self._cores[k] = ([0.0] * n_ports, [0.0] * n_ports,
+                              float(self.rates[k]))
+            self._rho[k] = 0.0
+
     def assign(self, fi: np.ndarray, fj: np.ndarray, sizes: np.ndarray,
                *, up: np.ndarray | None = None) -> np.ndarray:
         """Assign one chunk of flows (in global arrival order), mutating the

@@ -147,6 +147,7 @@ def build_flow_table(
     *,
     seed: int = 0,
     backend: str = "numpy",
+    delta_k: np.ndarray | None = None,
 ) -> FlowTable:
     """Flat assignment front-end: demand tensors -> assigned ``FlowTable``.
 
@@ -157,12 +158,36 @@ def build_flow_table(
     random policies have no kernel and always run the numpy path). On the
     numpy backend the resulting core choices are bit-identical to the
     dataclass oracles in ``assignment``.
+
+    ``delta_k`` (a ``(K,)`` per-core reconfiguration-delay vector; fault
+    model ``DeltaDrift``) prices the tau-aware completion bounds with each
+    core's delay in force instead of the uniform ``inst.delta``. The Pallas
+    kernel prices the uniform nominal delta only, so a drifted tau-aware
+    assignment always runs the numpy flat state (bit-identical to the
+    streaming ``FabricState`` assignment under the same drift); the
+    rho-only and random policies never read delta and ignore ``delta_k``.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if delta_k is not None:
+        delta_k = np.asarray(delta_k, dtype=np.float64)
+        if delta_k.shape != (inst.K,):
+            raise ValueError(
+                f"delta_k must have shape ({inst.K},), got {delta_k.shape}")
     policy, _ = _resolve_algorithm(algorithm, "")
     flows = extract_flows(inst, pi)
-    if backend == "pallas" and policy == "tau-aware":
+    if (policy == "tau-aware" and delta_k is not None
+            and bool(np.any(delta_k != inst.delta))):
+        from .assignment import FlatAssignState
+
+        st = FlatAssignState(policy, inst.rates, inst.delta, inst.N,
+                             seed=seed)
+        for k in range(inst.K):
+            if delta_k[k] != inst.delta:
+                st.set_delta(k, float(delta_k[k]))
+        _pos, _cid, fi, fj, sizes = flows
+        core = st.assign(fi, fj, sizes)
+    elif backend == "pallas" and policy == "tau-aware":
         core = _pallas_choices(inst, flows)
     else:
         core = assign_fast(inst, pi, policy, seed=seed, flows=flows)
@@ -409,6 +434,7 @@ def _sunflow_times(
     K: int,
     release: np.ndarray | None = None,
     prio: np.ndarray | None = None,
+    delta_k: np.ndarray | None = None,
 ) -> np.ndarray:
     """SUNFLOW-CORE: per core, coflows strictly sequential (barrier), flows of
     one coflow scheduled largest-first.
@@ -420,10 +446,14 @@ def _sunflow_times(
     the online variant: whenever the core frees, the *arrived* unserved
     coflow with the best priority rank is served next, idling until the next
     arrival if none is pending (matching ``online._sunflow_core_online``).
+
+    ``delta_k`` (per-core drifted delays) replaces the scalar ``delta``
+    core by core; the undrifted path computes the same floats as before.
     """
     t_est = np.full(table.n_flows, -1.0)
     idx = np.arange(table.n_flows)
     for k in range(K):
+        dk = delta if delta_k is None else float(delta_k[k])
         on_k = idx[table.core == k]
         barrier = 0.0
         if release is None:
@@ -453,11 +483,11 @@ def _sunflow_times(
             order = np.lexsort((table.fj[grp], table.fi[grp], -table.size[grp]))
             grp = grp[order]
             te = _event_loop(
-                rin[grp], rout[grp], srv[grp], table.core[grp], delta,
+                rin[grp], rout[grp], srv[grp], table.core[grp], dk,
                 n_res=K * n_ports, n_ports=n_ports, t0=barrier, guard=True,
             )
             t_est[grp] = te
-            barrier = max(barrier, float(((te + delta) + srv[grp]).max()))
+            barrier = max(barrier, float(((te + dk) + srv[grp]).max()))
     return t_est
 
 
@@ -467,6 +497,7 @@ def _times_for_table(
     table: FlowTable,
     scheduling: str = "work-conserving",
     releases: np.ndarray | None = None,
+    delta_k: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Scheduling phase over a flat ``FlowTable``: returns (t_est, srv).
 
@@ -476,24 +507,32 @@ def _times_for_table(
     eligibility is release-gated in the merged event loop, and the sunflow /
     reserving policies use their online variants. ``releases=None`` is the
     offline path.
+
+    ``delta_k`` (per-core drifted delays; fault model ``DeltaDrift``)
+    replaces the uniform ``inst.delta`` with ``delta_k[core]`` per flow.
+    ``None`` (or an all-nominal vector, which callers should normalize to
+    ``None``) computes the exact pre-drift floats.
     """
     K, N = inst.K, inst.N
     rin = table.core * N + table.fi
     rout = table.core * N + table.fj
     srv = table.size / inst.rates[table.core]
+    dl = inst.delta if delta_k is None \
+        else np.asarray(delta_k, dtype=np.float64)[table.core]
     if scheduling not in SCHEDULINGS:
         raise ValueError(
             f"unknown scheduling {scheduling!r}; one of {SCHEDULINGS}")
     if releases is None:
         if scheduling == "work-conserving":
-            t_est = _event_loop(rin, rout, srv, table.core, inst.delta, K * N, N)
+            t_est = _event_loop(rin, rout, srv, table.core, dl, K * N, N)
         elif scheduling == "priority-guard":
-            t_est = _event_loop(rin, rout, srv, table.core, inst.delta, K * N, N,
+            t_est = _event_loop(rin, rout, srv, table.core, dl, K * N, N,
                                 guard=True)
         elif scheduling == "reserving":
-            t_est = _reserving_times(rin, rout, srv, inst.delta, K * N)
+            t_est = _reserving_times(rin, rout, srv, dl, K * N)
         elif scheduling == "sunflow":
-            t_est = _sunflow_times(table, rin, rout, srv, inst.delta, N, K)
+            t_est = _sunflow_times(table, rin, rout, srv, inst.delta, N, K,
+                                   delta_k=delta_k)
     else:
         from .online import online_orders
 
@@ -508,25 +547,32 @@ def _times_for_table(
             perm = np.argsort(prio_f, kind="stable")
             te = _event_loop(
                 rin[perm], rout[perm], srv[perm], table.core[perm],
-                inst.delta, K * N, N, guard=(scheduling == "priority-guard"),
+                dl if delta_k is None else dl[perm], K * N, N,
+                guard=(scheduling == "priority-guard"),
                 release=rel_f[perm])
             t_est = np.empty_like(te)
             t_est[perm] = te
         elif scheduling == "reserving":
             # commitment in arrival order == the FlowTable's native order
-            t_est = _reserving_times(rin, rout, srv, inst.delta, K * N,
+            t_est = _reserving_times(rin, rout, srv, dl, K * N,
                                      release=rel_f)
         elif scheduling == "sunflow":
             t_est = _sunflow_times(table, rin, rout, srv, inst.delta, N, K,
-                                   release=rel_f, prio=prio_f)
+                                   release=rel_f, prio=prio_f,
+                                   delta_k=delta_k)
     return t_est, srv
 
 
 def _ccts_from_times(inst: Instance, pi: np.ndarray, table: FlowTable,
-                     t_est: np.ndarray, srv: np.ndarray) -> np.ndarray:
-    """Per-coflow CCTs (original id order) straight from the flat arrays."""
+                     t_est: np.ndarray, srv: np.ndarray,
+                     delta_f: np.ndarray | None = None) -> np.ndarray:
+    """Per-coflow CCTs (original id order) straight from the flat arrays.
+
+    ``delta_f`` is the per-flow reconfiguration delay in force (drifted
+    cores); ``None`` is the uniform ``inst.delta`` with the exact pre-drift
+    float expression."""
     ccts = np.zeros(inst.M)
-    t_complete = (t_est + inst.delta) + srv
+    t_complete = (t_est + (inst.delta if delta_f is None else delta_f)) + srv
     np.maximum.at(ccts, np.asarray(pi)[table.pos], t_complete)
     return ccts
 
@@ -538,6 +584,7 @@ def _schedule_from_times(
     table: FlowTable,
     t_est: np.ndarray,
     srv: np.ndarray,
+    delta_f: np.ndarray | None = None,
 ) -> Schedule:
     """Materialize ScheduledFlow records in the legacy order: core-major,
     priority order within each core (schedule_core_sunflow emits coflow
@@ -548,6 +595,7 @@ def _schedule_from_times(
         te = float(t_est[f])
         s = float(table.size[f])
         rate = float(inst.rates[table.core[f]])
+        dl = inst.delta if delta_f is None else float(delta_f[f])
         flows.append(
             ScheduledFlow(
                 coflow=int(table.pos[f]),
@@ -557,11 +605,11 @@ def _schedule_from_times(
                 core=int(table.core[f]),
                 size=s,
                 t_establish=te,
-                t_start=te + inst.delta,
-                t_complete=te + inst.delta + s / rate,
+                t_start=te + dl,
+                t_complete=te + dl + s / rate,
             )
         )
-    ccts = _ccts_from_times(inst, pi, table, t_est, srv)
+    ccts = _ccts_from_times(inst, pi, table, t_est, srv, delta_f)
     return Schedule(inst=inst, pi=pi, assignment=assignment, flows=flows, ccts=ccts)
 
 
@@ -587,6 +635,24 @@ def schedule_all_cores(
     return _schedule_from_times(inst, pi, assignment, table, t_est, srv)
 
 
+def _normalize_delta_k(inst: Instance,
+                       delta_k: np.ndarray | None) -> np.ndarray | None:
+    """Validate a per-core delay vector; an all-nominal vector becomes
+    ``None`` so the undrifted pipeline keeps its exact scalar float
+    expressions (drift-to-nominal round trips are bit-identical)."""
+    if delta_k is None:
+        return None
+    delta_k = np.asarray(delta_k, dtype=np.float64)
+    if delta_k.shape != (inst.K,):
+        raise ValueError(
+            f"delta_k must have shape ({inst.K},), got {delta_k.shape}")
+    if (delta_k < 0).any():
+        raise ValueError("drifted delta must be >= 0")
+    if np.all(delta_k == inst.delta):
+        return None
+    return delta_k
+
+
 def run_fast(
     inst: Instance,
     algorithm: str = "ours",
@@ -594,6 +660,7 @@ def run_fast(
     seed: int = 0,
     scheduling: str = "work-conserving",
     backend: str = "numpy",
+    delta_k: np.ndarray | None = None,
 ) -> Schedule:
     """Batched-engine counterpart of ``scheduler.run`` (same semantics).
 
@@ -606,12 +673,21 @@ def run_fast(
     (which is what ``cross_check`` and the differential suites assert);
     ``backend="pallas"`` runs tau-aware assignment on the TPU kernel (fp32
     precision contract — see ``kernels.coflow_assign``).
+
+    ``delta_k`` (per-core drifted reconfiguration delays; fault model
+    ``DeltaDrift``) prices assignment and scheduling with each core's delay
+    in force — what the one-shot service plane passes when the fabric has
+    drifted. ``None`` (or all-nominal) is the exact pre-drift pipeline.
     """
+    delta_k = _normalize_delta_k(inst, delta_k)
     pi = order_coflows(inst)
     _, scheduling = _resolve_algorithm(algorithm, scheduling)
-    table = build_flow_table(inst, pi, algorithm, seed=seed, backend=backend)
-    t_est, srv = _times_for_table(inst, pi, table, scheduling)
-    return _schedule_from_times(inst, pi, None, table, t_est, srv)
+    table = build_flow_table(inst, pi, algorithm, seed=seed, backend=backend,
+                             delta_k=delta_k)
+    t_est, srv = _times_for_table(inst, pi, table, scheduling,
+                                  delta_k=delta_k)
+    dl_f = None if delta_k is None else delta_k[table.core]
+    return _schedule_from_times(inst, pi, None, table, t_est, srv, dl_f)
 
 
 def run_fast_metrics(
@@ -622,6 +698,7 @@ def run_fast_metrics(
     scheduling: str = "work-conserving",
     backend: str = "numpy",
     releases: np.ndarray | None = None,
+    delta_k: np.ndarray | None = None,
 ) -> tuple[np.ndarray, int]:
     """Metrics-only fast path: per-coflow CCTs without object materialization.
 
@@ -639,10 +716,14 @@ def run_fast_metrics(
 
         releases = np.asarray(releases, dtype=np.float64)
         pi, _ = online_orders(inst, releases)
+    delta_k = _normalize_delta_k(inst, delta_k)
     _, scheduling = _resolve_algorithm(algorithm, scheduling)
-    table = build_flow_table(inst, pi, algorithm, seed=seed, backend=backend)
-    t_est, srv = _times_for_table(inst, pi, table, scheduling, releases)
-    return _ccts_from_times(inst, pi, table, t_est, srv), table.n_flows
+    table = build_flow_table(inst, pi, algorithm, seed=seed, backend=backend,
+                             delta_k=delta_k)
+    t_est, srv = _times_for_table(inst, pi, table, scheduling, releases,
+                                  delta_k=delta_k)
+    dl_f = None if delta_k is None else delta_k[table.core]
+    return _ccts_from_times(inst, pi, table, t_est, srv, dl_f), table.n_flows
 
 
 def run_fast_online(
@@ -652,6 +733,7 @@ def run_fast_online(
     seed: int = 0,
     scheduling: str = "work-conserving",
     backend: str = "numpy",
+    delta_k: np.ndarray | None = None,
 ) -> Schedule:
     """Batched-engine counterpart of ``online.run_online`` (same semantics).
 
@@ -662,17 +744,22 @@ def run_fast_online(
     through the vectorized engine (``cross_check_online`` and
     tests/test_online_differential.py assert agreement with ``run_online``).
     With ``releases == 0`` the result is bit-identical to the offline
+    ``run_fast``. ``delta_k`` prices drifted per-core delays exactly as in
     ``run_fast``.
     """
     inst = oinst.inst
     rel = np.asarray(oinst.releases, dtype=np.float64)
     from .online import online_orders
 
+    delta_k = _normalize_delta_k(inst, delta_k)
     arrival, _ = online_orders(inst, rel)
     _, scheduling = _resolve_algorithm(algorithm, scheduling)
-    table = build_flow_table(inst, arrival, algorithm, seed=seed, backend=backend)
-    t_est, srv = _times_for_table(inst, arrival, table, scheduling, releases=rel)
-    return _schedule_from_times(inst, arrival, None, table, t_est, srv)
+    table = build_flow_table(inst, arrival, algorithm, seed=seed,
+                             backend=backend, delta_k=delta_k)
+    t_est, srv = _times_for_table(inst, arrival, table, scheduling,
+                                  releases=rel, delta_k=delta_k)
+    dl_f = None if delta_k is None else delta_k[table.core]
+    return _schedule_from_times(inst, arrival, None, table, t_est, srv, dl_f)
 
 
 # --------------------------------------------------------------------------
@@ -712,6 +799,56 @@ _PEND_FIELDS = (
 _COMMIT_FIELDS = _PEND_FIELDS + (
     ("t_est", np.float64), ("t_comp", np.float64),
 )
+
+
+def _touched_rows(rin: np.ndarray, rout: np.ndarray, n_res: int,
+                  n_new_from: int) -> np.ndarray:
+    """Delta-scheduling touched set: which pending rows a new arrival can
+    perturb.
+
+    Flows interact ONLY through shared (core, port) resources — the event
+    loop starts a flow by comparing it against the other users of its two
+    resources, and nothing else. So the pending set decomposes exactly into
+    connected components of the bipartite resource-sharing graph (ingress
+    resources, egress resources offset by ``n_res``; one edge per flow), and
+    a batch of new rows (indices ``>= n_new_from``) can only change the
+    tentative times of rows in components it touches: cross-component flows
+    share no resource with any new flow, directly or transitively, so every
+    availability horizon and first-pending-candidate test they see is
+    unchanged (the not-all-stop property of the OCS model, applied to
+    scheduling work instead of circuits).
+
+    Returns a boolean row mask. Union-find over the ``2 * n_res`` resource
+    nodes with one union per *distinct* resource pair — O(unique pairs +
+    n_res), independent of the backlog's flow count.
+    """
+    F = rin.size
+    if n_new_from <= 0:
+        return np.ones(F, dtype=bool)
+    if n_new_from >= F:
+        return np.zeros(F, dtype=bool)
+    span = 2 * n_res
+    pairs = np.unique(rin * span + (rout + n_res))
+    parent = list(range(span))
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for p in pairs.tolist():
+        a, b = find(p // span), find(p % span)
+        if a != b:
+            parent[b] = a
+    touched = np.zeros(span, dtype=bool)
+    for r in np.unique(rin[n_new_from:]).tolist():
+        touched[find(r)] = True
+    root_of = np.fromiter((find(r) for r in range(n_res)),
+                          dtype=np.int64, count=n_res)
+    return touched[root_of[rin]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -776,6 +913,8 @@ class FabricState:
         seed: int = 0,
         faults=None,
         track_commits: bool | None = None,
+        delta_schedule: bool = True,
+        fault_lookback: float = np.inf,
     ):
         policy, scheduling = _resolve_algorithm(algorithm, scheduling)
         if scheduling not in INCREMENTAL_SCHEDULINGS:
@@ -806,6 +945,20 @@ class FabricState:
         self.t_now = 0.0
         self._ticks = 0
         self._pend = {name: np.zeros(0, dtype=dt) for name, dt in _PEND_FIELDS}
+        # -- delta-scheduling (touched-set) cache ---------------------------
+        #: re-run the event loop only over the resource-sharing components a
+        #: new arrival touches, splicing cached tentative times for the rest
+        #: (bit-identical to the full tentative replay; see _touched_rows and
+        #: cross_check_incremental's delta-vs-full gate)
+        self.delta_schedule = bool(delta_schedule)
+        #: cached tentative t_establish aligned row-for-row with ``_pend``;
+        #: ``None`` = no valid cache (first tick, or a fault perturbed the
+        #: pending set / horizons / delays out from under it)
+        self._tent: np.ndarray | None = None
+        #: delta-scheduling effectiveness counters (rows spliced from the
+        #: cache vs rows re-run through the event loop, cumulative)
+        self.tent_reused = 0
+        self.tent_recomputed = 0
         # per-gid registry (appended at admission)
         self._cid: list[int] = []
         self._weight: list[float] = []
@@ -828,6 +981,20 @@ class FabricState:
         self._commit = (
             {name: np.zeros(0, dtype=dt) for name, dt in _COMMIT_FIELDS}
             if self.track_commits else None)
+        # -- committed-circuit retention GC ---------------------------------
+        #: how far back a late-discovered fault may be timestamped; commits
+        #: completing at or before ``t_now - fault_lookback`` can never be
+        #: classified by an admissible event and are dropped (watermark GC)
+        if not fault_lookback >= 0:
+            raise ValueError("fault_lookback must be >= 0 (np.inf = retain "
+                             "every commit forever)")
+        self.fault_lookback = float(fault_lookback)
+        self._gc_floor = -np.inf  # commits with t_comp <= floor are gone
+        self.commits_gced = 0     # exact count of GCed commit rows
+        #: per-gid max completion among GCed commits: keeps the running-CCT
+        #: rollback exact when a fault unfinalizes a coflow whose earlier
+        #: circuits were already collected
+        self._gc_cct: list[float] = []
         self.core_up = np.ones(self.K, dtype=bool)
         #: per-core reconfiguration delay (DeltaDrift moves entries)
         self.delta_k = np.full(self.K, self.delta)
@@ -852,6 +1019,18 @@ class FabricState:
     @property
     def n_pending_flows(self) -> int:
         return int(self._pend["gid"].size)
+
+    @property
+    def delta_drifted(self) -> bool:
+        """True while any core's reconfiguration delay is off-nominal."""
+        return bool(self._drifted)
+
+    @property
+    def n_commits_retained(self) -> int:
+        """Committed circuits currently retained for fault classification
+        (0 without commit tracking)."""
+        c = self._commit
+        return int(c["gid"].size) if c is not None else 0
 
     def ccts(self) -> np.ndarray:
         """Running per-coflow CCTs indexed by gid (final once finalized)."""
@@ -889,6 +1068,42 @@ class FabricState:
         free_out[down] = np.inf
         self.free_in = free_in
         self.free_out = free_out
+
+    def _gc_commits(self, t_now: float) -> None:
+        """Watermark GC over the retained commits (satellite of the fault
+        model): a fault discovered late may be timestamped no earlier than
+        ``t_now - fault_lookback``, and classification only aborts circuits
+        with ``t_comp > t_fault``, so commits completing at or before the
+        watermark can never be aborted again — drop them.
+
+        Dropping is also invisible to scheduling: a GCed ``t_comp`` is
+        ``<= gc_floor <= t_now``, and every future event-loop seed /
+        reservation start is ``>= t_now`` (``max`` semantics make values at
+        or below ``t0`` equivalent), so horizon rebuilds after later faults
+        compute the same floats with or without the dropped rows. The only
+        value they still feed — a re-opened coflow's running CCT — is kept
+        exact through the per-gid ``_gc_cct`` max.
+        """
+        if not np.isfinite(self.fault_lookback):
+            return
+        if np.isfinite(t_now):
+            # finalize()'s t=inf tick is end-of-stream bookkeeping, not the
+            # passage of time: it does not advance the watermark
+            wm = t_now - self.fault_lookback
+            if wm > self._gc_floor:
+                self._gc_floor = wm
+        c = self._commit
+        if c is None or not c["gid"].size or self._gc_floor == -np.inf:
+            return
+        drop = c["t_comp"] <= self._gc_floor
+        n_drop = int(drop.sum())
+        if not n_drop:
+            return
+        for g, v in zip(c["gid"][drop].tolist(), c["t_comp"][drop].tolist()):
+            if v > self._gc_cct[g]:
+                self._gc_cct[g] = v
+        self._commit = {name: c[name][~drop] for name, _dt in _COMMIT_FIELDS}
+        self.commits_gced += n_drop
 
     def _requeue(self, moved: dict, t_f: float, bump_release: np.ndarray
                  ) -> None:
@@ -942,6 +1157,10 @@ class FabricState:
         k = int(event.core)
         if not 0 <= k < self.K:
             raise ValueError(f"core {k} out of range for K={self.K}")
+        # Any fault can move horizons, delays, or the pending set out from
+        # under the delta-scheduling cache; drop it (next tick recomputes in
+        # full — exactly what correctness after churn requires).
+        self._tent = None
 
         def _done(aborted=(), requeued=0, reassigned=0, unfinalized=()):
             app = FaultApplication(
@@ -961,6 +1180,13 @@ class FabricState:
             if self.core_up[k]:
                 raise ValueError(f"core {k} is already up")
             self.core_up[k] = True
+            # The dead core delivered nothing while down and its interrupted
+            # circuits were re-queued elsewhere, so its true future load is
+            # zero: reset the greedy assignment state's view of it, or the
+            # stale historical load would under-use the recovered core
+            # indefinitely (it converges back toward the healthy mix —
+            # asserted in tests/test_fault_residue.py).
+            self._assign.reset_core(k)
             self._rebuild_horizons()
             return _done()
 
@@ -971,6 +1197,13 @@ class FabricState:
                 "cannot classify committed circuits on a "
                 f"{type(event).__name__}; rebuild it with "
                 "track_commits=True or a FaultInjector")
+        if t_f < self._gc_floor:
+            raise ValueError(
+                f"fault at t={t_f} predates the committed-circuit retention "
+                f"watermark t={self._gc_floor} (fault_lookback="
+                f"{self.fault_lookback}): the commits it would classify have "
+                f"been garbage-collected; widen fault_lookback or report "
+                f"faults sooner")
         c = self._commit
         strand = np.zeros(self._pend["gid"].size, dtype=bool)
         if isinstance(event, CoreDown):
@@ -1017,8 +1250,13 @@ class FabricState:
             if self._ndone[g] == self._nflows[g]:
                 unfinalized.append(g)
             self._ndone[g] -= n
+            # recompute the running CCT from what survives; GCed circuits of
+            # this coflow (inside the watermark they completed, so they can
+            # no longer be aborted) contribute through the exact per-gid max
             rem = self._commit["t_comp"][self._commit["gid"] == g]
-            self._cct[g] = float(rem.max()) if rem.size else 0.0
+            base = self._gc_cct[g]
+            self._cct[g] = float(max(float(rem.max()), base)) if rem.size \
+                else base
 
         moved = {
             name: np.concatenate(
@@ -1066,6 +1304,7 @@ class FabricState:
             self._nflows.append(c.num_flows)
             self._ndone.append(0)
             self._cct.append(0.0)
+            self._gc_cct.append(0.0)
         order = np.lexsort((np.arange(B), -scores, releases))
         batch = tuple(coflows[int(b)] for b in order)
         inst_b = Instance(coflows=batch, rates=self.rates, delta=self.delta)
@@ -1121,6 +1360,7 @@ class FabricState:
             fault_apps = tuple(
                 self.apply_fault(ev) for ev in self.faults.pop_due(t_now))
         t_prev = self.t_now
+        n_old = self._pend["gid"].size
         if len(coflows):
             batch = self._admit(coflows, releases)
             pend = {
@@ -1145,19 +1385,41 @@ class FabricState:
                 avail_out=self.free_out)
             commit = np.ones(t_est.size, dtype=bool)
         else:
-            # Priority order: WSPT score desc, admission index, intra-coflow
-            # extraction order — the global arrival pipeline's flow order
-            # restricted to the pending set.
-            perm = np.lexsort((pend["intra"], pend["gid"], -pend["score"]))
-            te = _event_loop(
-                rin[perm], rout[perm], pend["srv"][perm], pend["core"][perm],
-                self.delta if dl_f is None else dl_f[perm], n_res, self.N,
-                t0=t_prev,
-                guard=(self.scheduling == "priority-guard"),
-                release=pend["rel"][perm],
-                free_in0=self.free_in, free_out0=self.free_out)
-            t_est = np.empty_like(te)
-            t_est[perm] = te
+            # Delta-scheduling: tentative times are stable across ticks
+            # unless new competitors share a resource component (the same
+            # invariant behind commit finality — an event at or before the
+            # previous tick can't be changed by later arrivals; an event
+            # after it can only be changed by flows in the same component).
+            # So the cached tentative times of untouched components are
+            # spliced, and only the touched rows re-run the event loop.
+            F = rin.size
+            t_est = np.empty(F)
+            if (self.delta_schedule and self._tent is not None
+                    and self._tent.size == n_old):
+                t_est[:n_old] = self._tent
+                dirty = _touched_rows(rin, rout, n_res, n_old)
+            else:
+                dirty = np.ones(F, dtype=bool)
+            sub = np.nonzero(dirty)[0]
+            self.tent_reused += int(F - sub.size)
+            self.tent_recomputed += int(sub.size)
+            if sub.size:
+                # Priority order: WSPT score desc, admission index,
+                # intra-coflow extraction order — the global arrival
+                # pipeline's flow order restricted to the (touched) pending
+                # set; a component's restriction equals the global order's
+                # restriction because components share no resources.
+                perm = np.lexsort((pend["intra"][sub], pend["gid"][sub],
+                                   -pend["score"][sub]))
+                s = sub[perm]
+                te = _event_loop(
+                    rin[s], rout[s], pend["srv"][s], pend["core"][s],
+                    self.delta if dl_f is None else dl_f[s], n_res, self.N,
+                    t0=t_prev,
+                    guard=(self.scheduling == "priority-guard"),
+                    release=pend["rel"][s],
+                    free_in0=self.free_in, free_out0=self.free_out)
+                t_est[s] = te
             commit = t_est <= t_now
         if dl_f is None:
             tc = (t_est[commit] + self.delta) + pend["srv"][commit]
@@ -1173,6 +1435,7 @@ class FabricState:
             self._commit = {
                 name: np.concatenate([self._commit[name], newc[name]])
                 for name, _dt in _COMMIT_FIELDS}
+            self._gc_commits(t_now)
         finalized = []
         for g, v in zip(pend["gid"][commit].tolist(), tc.tolist()):
             self._ndone[g] += 1
@@ -1200,6 +1463,8 @@ class FabricState:
                 g for app in fault_apps for g in app.unfinalized),
         )
         self._pend = {name: pend[name][~commit] for name, _dt in _PEND_FIELDS}
+        self._tent = (None if self.scheduling == "reserving"
+                      else t_est[~commit])
         self.t_now = t_now
         self._ticks += 1
         return out
@@ -1207,6 +1472,21 @@ class FabricState:
     def finalize(self) -> TickCommit:
         """End-of-stream tick: commit every still-pending circuit."""
         return self.step((), (), np.inf)
+
+
+def _assert_commits_equal(a: TickCommit, b: TickCommit, t: float) -> None:
+    """Bit-exact equality of two TickCommits (delta-vs-full replay gate)."""
+    for field in ("gid", "cid", "fi", "fj", "core", "size",
+                  "t_establish", "t_complete"):
+        va, vb = getattr(a, field), getattr(b, field)
+        if not np.array_equal(va, vb):
+            raise AssertionError(
+                f"delta-scheduling/full-replay divergence at tick t={t}: "
+                f"{field} differs ({va!r} vs {vb!r})")
+    if a.finalized != b.finalized or a.n_pending != b.n_pending:
+        raise AssertionError(
+            f"delta-scheduling/full-replay divergence at tick t={t}: "
+            f"finalized/pending bookkeeping differs")
 
 
 def cross_check_incremental(
@@ -1217,6 +1497,7 @@ def cross_check_incremental(
     scheduling: str = "work-conserving",
     n_ticks: int = 8,
     tick_times: np.ndarray | None = None,
+    compare_delta: bool = True,
 ) -> list[TickCommit]:
     """Differential gate for the incremental path: FabricState vs full replay.
 
@@ -1227,6 +1508,13 @@ def cross_check_incremental(
     CCTs — to one ``run_fast_online`` call over the whole stream. The replay
     instance lists coflows in admission order (the service's identity
     order), which only re-labels ``oinst`` when releases are untied.
+
+    ``compare_delta`` additionally drives a second ``FabricState`` with
+    delta-scheduling disabled (full tentative replay every tick) through the
+    identical tick sequence and asserts every tick's commit — flow set, core
+    choices, establishment AND completion times, finalizations, pending
+    count — is bit-identical to the delta-scheduled state's: the touched-set
+    splice must be indistinguishable from recomputing the whole backlog.
     Returns the per-tick commits.
     """
     inst = oinst.inst
@@ -1252,12 +1540,25 @@ def cross_check_incremental(
     fast = run_fast_online(replay, algorithm, seed=seed, scheduling=scheduling)
 
     st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
-                     algorithm=algorithm, scheduling=scheduling, seed=seed)
+                     algorithm=algorithm, scheduling=scheduling, seed=seed,
+                     delta_schedule=True)
+    st_full = (FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                           algorithm=algorithm, scheduling=scheduling,
+                           seed=seed, delta_schedule=False)
+               if compare_delta else None)
     commits = []
     for T, ids in zip(ticks, batches):
-        commits.append(st.step([inst.coflows[int(m)] for m in ids],
-                               rel[ids], T))
+        cofs = [inst.coflows[int(m)] for m in ids]
+        commits.append(st.step(cofs, rel[ids], T))
+        if st_full is not None:
+            _assert_commits_equal(
+                commits[-1], st_full.step(cofs, rel[ids], T), T)
     commits.append(st.finalize())
+    if st_full is not None:
+        _assert_commits_equal(commits[-1], st_full.finalize(), np.inf)
+        if not np.array_equal(st.ccts(), st_full.ccts()):
+            raise AssertionError(
+                "delta-scheduling/full-replay CCT divergence")
     if st.n_pending_flows:
         raise AssertionError("finalize left pending flows")
 

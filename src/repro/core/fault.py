@@ -23,8 +23,13 @@ circuits, in-flight transmissions and the tentative schedule — live in
 ``CoreUp(t, core)``
     The core rejoins at ``t``: horizons are rebuilt from the surviving
     committed circuits and new assignments may choose it again. The greedy
-    assignment state keeps the core's historical load (conservative: a
-    recovered core looks busier than it is until real load catches up).
+    assignment state RESETS the recovered core's accumulated load
+    (``FlatAssignState.reset_core``): a core that went down delivered
+    nothing while dark and its interrupted circuits were re-queued onto the
+    survivors, so its true outstanding load is zero — keeping the stale
+    pre-failure history would under-use the recovered core indefinitely.
+    The recovered core is the cheapest candidate until its fresh load
+    catches up, converging the fabric back toward the healthy mix.
 
 ``PortFlap(t, t_end, core, port)``
     The port's transceiver is unusable on ``[t, t_end)`` in both directions.
@@ -50,6 +55,14 @@ tick's arrivals (the control plane learns of a fault when it wakes).
 ``service.FabricManager.report_fault`` applies a single event immediately
 between ticks — including events timestamped in the past (late discovery:
 circuits the manager believed delivered are retro-aborted and re-queued).
+
+Late discovery is bounded by ``FabricState``'s ``fault_lookback`` window:
+commits completing at or before ``t_now - fault_lookback`` can never be
+aborted by an admissible event (classification only aborts circuits with
+``t_comp > t_fault``), so the watermark GC drops them (exact count in
+``FabricState.commits_gced``) and a ``CoreDown``/``PortFlap`` timestamped
+before the watermark is rejected with ``ValueError``. The default
+``fault_lookback=inf`` retains every commit forever (the pre-GC behavior).
 
 A ``FaultInjector`` with zero events is bit-identical to no injector at
 all, tick by tick — fuzzed in ``tests/test_fault_differential.py``.

@@ -3,7 +3,9 @@ scheduling over committed circuits, and circuit-program emission.
 
 The control-plane layer that *operates* the scheduling engine continuously:
 
-  - ``admission``  — bounded request queue, micro-batching, backpressure;
+  - ``admission``  — bounded request queue, micro-batching, backpressure,
+    and the overload-survival :class:`AdmissionPolicy` (flow-budget caps,
+    load-shedding to standby, work-conserving backfill);
   - ``manager``    — :class:`FabricManager`, the service loop (streaming
     ticks over ``core.engine.FabricState`` + cached one-shot scheduling +
     the fault plane: :meth:`FabricManager.report_fault` applies topology
@@ -19,6 +21,7 @@ See ``examples/serve_fabric.py`` for the end-to-end loop,
 ``benchmarks/bench_fault.py`` for recovery latency / degraded throughput.
 """
 from .admission import (  # noqa: F401
+    AdmissionPolicy,
     AdmissionQueue,
     ArrivalRequest,
     BackpressureError,

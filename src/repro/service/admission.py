@@ -11,11 +11,38 @@ requests, :meth:`AdmissionQueue.push` raises :class:`BackpressureError` and
 counts the rejection — the caller (load balancer, client library) must slow
 down or retry; silently unbounded queues are how control planes melt.
 
+Overload survival is :class:`AdmissionPolicy` (Varys-style order ->
+allocate -> reject, with work-conserving backfilling):
+
+  - **flow budget** — the tentative backlog is capped in FLOWS, not queue
+    entries (one coflow can carry thousands of circuits, and the per-tick
+    event-loop cost scales with pending flows). A released request whose
+    flow count exceeds the remaining budget is DEFERRED to the next tick —
+    but later, smaller requests are still admitted past it
+    (work-conserving backfilling, the WSS allocate loop of SNIPPETS §2).
+  - **shedding** — when the released backlog still exceeds ``shed_depth``
+    after a drain, the lowest-priority-score requests (the ones the WSPT
+    order would serve last anyway) are moved to a standby buffer instead of
+    churning the scheduler every tick.
+  - **backfill** — once the released backlog drains to ``resume_depth``,
+    standby requests re-enter the queue in their shed order: shed work is
+    deferred, not lost (and ``FabricManager.flush`` recalls all of it).
+  - **hard drop** — the standby buffer is itself bounded
+    (``max_standby``); overflow permanently rejects the oldest standby
+    requests, counted in :attr:`AdmissionQueue.dropped`.
+
+Every transition is counted exactly (``rejected``, ``late``, ``deferred``,
+``shed``, ``backfilled``, ``dropped``), so telemetry can account for every
+submitted coflow: admitted + queued + standby + rejected + dropped ==
+submitted, at all times.
+
 Late arrivals — a release at or before the fabric's last committed tick,
 for which bit-exact scheduling is no longer possible because those circuits
 are already programmed — are clamped to just after the last tick (the
 coflow is treated as arriving now) and counted, mirroring what a real
 fabric manager does with a request that raced its own admission window.
+A request that is late only because the policy deferred or shed it is NOT
+counted late again — the clamp is the policy's doing, not the caller's.
 """
 from __future__ import annotations
 
@@ -26,7 +53,8 @@ import numpy as np
 
 from repro.core.coflow import Coflow
 
-__all__ = ["ArrivalRequest", "BackpressureError", "AdmissionQueue"]
+__all__ = ["ArrivalRequest", "AdmissionPolicy", "BackpressureError",
+           "AdmissionQueue"]
 
 
 class BackpressureError(RuntimeError):
@@ -35,35 +63,114 @@ class BackpressureError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class ArrivalRequest:
-    """One coflow arrival: the demand plus its release (arrival) time."""
+    """One coflow arrival: the demand plus its release (arrival) time.
+
+    ``score`` is the coflow's WSPT priority score at submission (used to
+    pick shedding victims — lowest score sheds first); ``n_flows`` its flow
+    count (what the flow budget charges); ``deferred`` marks a request the
+    policy already held back at least once (its late-clamp is then
+    accounted to the policy, not the caller).
+    """
 
     coflow: Coflow
     release: float
     submitted_s: float  # wall-clock (perf_counter) at submission
+    score: float = 0.0
+    n_flows: int = 0
+    deferred: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Overload-survival knobs for :class:`AdmissionQueue` (all optional;
+    the default policy enforces nothing and reproduces plain FIFO drains).
+
+    ``max_pending_flows`` caps the engine's tentative backlog in flows: a
+    drain admits released requests in order but never pushes the pending
+    flow count past the cap, deferring over-budget requests while
+    backfilling later smaller ones. ``shed_depth``/``resume_depth`` are the
+    shed/backfill watermarks over the *released* queue backlog, and
+    ``max_standby`` bounds the standby buffer (``None`` = unbounded).
+    """
+
+    max_pending_flows: int | None = None
+    shed_depth: int | None = None
+    resume_depth: int | None = None
+    max_standby: int | None = None
+
+    def __post_init__(self):
+        for name in ("max_pending_flows", "shed_depth", "resume_depth",
+                     "max_standby"):
+            v = getattr(self, name)
+            if v is not None and v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v}")
+        if self.resume_depth is not None:
+            if self.shed_depth is None:
+                raise ValueError("resume_depth without shed_depth is "
+                                 "meaningless: nothing is ever shed")
+            if self.resume_depth > self.shed_depth:
+                raise ValueError(
+                    f"resume_depth ({self.resume_depth}) must be <= "
+                    f"shed_depth ({self.shed_depth}) or shed/backfill "
+                    f"would oscillate within one drain")
+        if self.max_standby is not None and self.shed_depth is None:
+            raise ValueError("max_standby without shed_depth is "
+                             "meaningless: nothing is ever shed")
+
+    @property
+    def effective_resume_depth(self) -> int:
+        """Backfill watermark (defaults to half the shed watermark)."""
+        if self.resume_depth is not None:
+            return self.resume_depth
+        return 0 if self.shed_depth is None else self.shed_depth // 2
+
+    @property
+    def enforces_anything(self) -> bool:
+        return (self.max_pending_flows is not None
+                or self.shed_depth is not None)
 
 
 class AdmissionQueue:
     """Bounded FIFO of arrival requests with micro-batch draining."""
 
-    def __init__(self, max_depth: int = 1024):
+    def __init__(self, max_depth: int = 1024,
+                 policy: AdmissionPolicy | None = None):
         if max_depth < 1:
             raise ValueError("max_depth must be >= 1")
         self.max_depth = int(max_depth)
-        self.rejected = 0
-        self.late = 0
+        self.policy = policy if policy is not None else AdmissionPolicy()
+        self.rejected = 0    # push backpressure (queue full)
+        self.late = 0        # caller-raced releases clamped at admission
+        self.deferred = 0    # flow-budget deferrals (events, not requests)
+        self.shed = 0        # requests moved to standby
+        self.backfilled = 0  # standby requests re-entering the queue
+        self.dropped = 0     # standby overflow: permanently rejected
         self._q: deque[ArrivalRequest] = deque()
+        self._standby: deque[ArrivalRequest] = deque()
 
     def __len__(self) -> int:
         return len(self._q)
 
     @property
     def depth(self) -> int:
+        """Active queue depth (standby not included; see standby_depth)."""
         return len(self._q)
 
     @property
+    def standby_depth(self) -> int:
+        return len(self._standby)
+
+    @property
+    def total_depth(self) -> int:
+        """Every request the queue still owes the fabric."""
+        return len(self._q) + len(self._standby)
+
+    @property
     def max_release(self) -> float:
-        """Latest release among queued requests (-inf when empty)."""
-        return max((r.release for r in self._q), default=-np.inf)
+        """Latest release among queued + standby requests (-inf if none)."""
+        return max(
+            max((r.release for r in self._q), default=-np.inf),
+            max((r.release for r in self._standby), default=-np.inf))
 
     def push(self, req: ArrivalRequest) -> None:
         """Enqueue, or raise :class:`BackpressureError` when full."""
@@ -80,30 +187,104 @@ class AdmissionQueue:
         bound — they were admitted once and must not be dropped."""
         self._q.extendleft(reversed(reqs))
 
-    def drain(self, t_now: float, t_floor: float) -> list[ArrivalRequest]:
-        """Dequeue every request released at or before ``t_now``.
+    def recall_standby(self) -> int:
+        """Move every standby request back into the active queue (end of
+        stream: the flush must not leave shed work behind). Exempt from the
+        depth bound, like requeue_front. Returns the count recalled."""
+        n = len(self._standby)
+        if n:
+            self.backfilled += n
+            self._q.extend(self._standby)
+            self._standby.clear()
+        return n
+
+    def _backfill(self, t_now: float) -> None:
+        """Standby re-enters when the released backlog has drained below the
+        resume watermark (work-conserving: shed work is deferred, not lost)."""
+        pol = self.policy
+        if not self._standby or pol.shed_depth is None:
+            return
+        released = sum(1 for r in self._q if r.release <= t_now)
+        if released > pol.effective_resume_depth:
+            return
+        room = pol.shed_depth - released
+        while self._standby and room > 0:
+            self._q.append(self._standby.popleft())
+            self.backfilled += 1
+            room -= 1
+
+    def _shed(self, keep: deque, t_now: float) -> deque:
+        """Move the lowest-score released leftovers above ``shed_depth``
+        into standby; overflow beyond ``max_standby`` is dropped for good."""
+        pol = self.policy
+        if pol.shed_depth is None:
+            return keep
+        kept = list(keep)
+        released = [x for x, r in enumerate(kept) if r.release <= t_now]
+        excess = len(released) - pol.shed_depth
+        if excess <= 0:
+            return keep
+        # victims: lowest WSPT score first; newest first among ties (the
+        # oldest equal-priority work has waited longest and stays)
+        victims = set(sorted(
+            released, key=lambda x: (kept[x].score, -x))[:excess])
+        self.shed += excess
+        for x in sorted(victims):
+            self._standby.append(
+                dataclasses.replace(kept[x], deferred=True))
+        kept = [r for x, r in enumerate(kept) if x not in victims]
+        if pol.max_standby is not None:
+            while len(self._standby) > pol.max_standby:
+                self._standby.popleft()
+                self.dropped += 1
+        return deque(kept)
+
+    def drain(self, t_now: float, t_floor: float,
+              flow_budget: int | None = None) -> list[ArrivalRequest]:
+        """Dequeue every request released at or before ``t_now`` that fits
+        the flow budget.
 
         Requests released at or before ``t_floor`` (the fabric's last
         committed tick) are LATE: their release is clamped to just after
         ``t_floor`` so the incremental engine can still admit them, and the
-        clamp is counted in :attr:`late`. Submission order is preserved;
-        future releases stay queued.
+        clamp is counted in :attr:`late` — unless the request was deferred
+        or shed by the policy, in which case the clamp is the policy's own
+        doing and is not the caller's lateness. Submission order is
+        preserved; future releases stay queued.
+
+        ``flow_budget`` (None = unbounded) is the number of tentative flows
+        the engine can still take: an over-budget released request is
+        deferred (counted in :attr:`deferred`) while later smaller requests
+        keep being admitted — work-conserving backfilling. After the walk,
+        shedding/backfill run against the leftover released backlog.
         """
+        self._backfill(t_now)
         admitted, keep = [], deque()
         floor = float(np.nextafter(t_floor, np.inf))
+        budget = flow_budget
         while self._q:
             req = self._q.popleft()
             if req.release > t_now:
                 keep.append(req)
                 continue
-            if req.release <= t_floor:
-                if floor > t_now:
-                    # the admissible window (t_floor, t_now] is empty (tick
-                    # repeated the committed time); hold until it reopens
-                    keep.append(req)
-                    continue
-                self.late += 1
+            is_late = req.release <= t_floor
+            if is_late and floor > t_now:
+                # the admissible window (t_floor, t_now] is empty (tick
+                # repeated the committed time); hold until it reopens
+                keep.append(req)
+                continue
+            if budget is not None and req.n_flows > budget:
+                self.deferred += 1
+                if not req.deferred:
+                    req = dataclasses.replace(req, deferred=True)
+                keep.append(req)
+                continue
+            if budget is not None:
+                budget -= req.n_flows
+            if is_late:
+                if not req.deferred:
+                    self.late += 1
                 req = dataclasses.replace(req, release=floor)
             admitted.append(req)
-        self._q = keep
+        self._q = self._shed(keep, t_now)
         return admitted

@@ -40,7 +40,12 @@ from repro.core.engine import (
     run_fast_online,
 )
 
-from .admission import AdmissionQueue, ArrivalRequest, BackpressureError
+from .admission import (
+    AdmissionPolicy,
+    AdmissionQueue,
+    ArrivalRequest,
+    BackpressureError,
+)
 from .cache import ProgramCache, instance_key
 from .program import (
     CircuitEvent,
@@ -51,7 +56,7 @@ from .program import (
 )
 
 __all__ = ["FabricConfig", "TickReport", "FaultReport", "FabricManager",
-           "BackpressureError"]
+           "AdmissionPolicy", "BackpressureError"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +86,19 @@ class FabricConfig:
     #: discovered out-of-band go through :meth:`FabricManager.report_fault`
     #: instead.
     faults: object | None = None
+    #: Overload-survival policy (flow-budget caps, shedding, backfilling;
+    #: see ``admission.AdmissionPolicy``). ``None`` enforces nothing — the
+    #: plain bounded-FIFO behavior.
+    admission: AdmissionPolicy | None = None
+    #: Committed-circuit retention window for late fault discovery: commits
+    #: completing before ``t_now - fault_lookback`` are garbage-collected
+    #: (see ``core.fault``); ``inf`` retains everything forever.
+    fault_lookback: float = np.inf
+    #: Delta-scheduling (touched-set) in the incremental engine: re-run the
+    #: event loop only over resource components a new arrival touches.
+    #: ``False`` replays the whole tentative backlog every tick (the
+    #: bit-identical reference; see ``engine.cross_check_incremental``).
+    delta_schedule: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +115,10 @@ class TickReport:
     program: CircuitProgram
     aborted: int = 0       # circuits torn down by faults applied this tick
     unfinalized: int = 0   # final CCTs retracted by those faults
+    deferred: int = 0      # flow-budget deferral events this tick
+    shed: int = 0          # requests moved to standby this tick
+    backfilled: int = 0    # standby requests re-queued this tick
+    standby_depth: int = 0  # standby backlog after the tick
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,9 +149,12 @@ class FabricManager:
             rates=np.asarray(config.rates, dtype=np.float64),
             delta=config.delta, N=config.N, algorithm=config.algorithm,
             scheduling=config.scheduling, seed=config.seed,
-            faults=config.faults, track_commits=True)
+            faults=config.faults, track_commits=True,
+            delta_schedule=config.delta_schedule,
+            fault_lookback=config.fault_lookback)
         self.fault_reports: list[FaultReport] = []
-        self.queue = AdmissionQueue(max_depth=config.max_queue_depth)
+        self.queue = AdmissionQueue(max_depth=config.max_queue_depth,
+                                    policy=config.admission)
         self.cache = ProgramCache(capacity=config.cache_capacity)
         self.reports: "deque[TickReport]" = deque(
             maxlen=config.max_history_ticks)
@@ -155,16 +180,44 @@ class FabricManager:
             raise ValueError(
                 f"coflow {coflow.cid} has N={coflow.n_ports}, fabric has "
                 f"N={self.config.N}")
+        score = 0.0
+        if self.queue.policy.shed_depth is not None:
+            # shedding victims are picked by WSPT score, through the one
+            # shared definition (scores are per-coflow, priced over the
+            # surviving fabric — same floats _admit computes)
+            from repro.core.ordering import priority_scores
+
+            score = float(priority_scores(Instance(
+                coflows=(coflow,),
+                rates=self.state.rates[self.state.core_up],
+                delta=self.config.delta))[0])
         self.queue.push(ArrivalRequest(
             coflow=coflow, release=float(release),
-            submitted_s=time.perf_counter()))
+            submitted_s=time.perf_counter(),
+            score=score, n_flows=coflow.num_flows))
 
     def tick(self, t_now: float) -> TickReport:
         """One service tick at stream time ``t_now``: drain the admission
-        queue, schedule pending flows incrementally, commit + compile this
-        tick's circuits."""
+        queue (under the admission policy's flow budget), schedule pending
+        flows incrementally, commit + compile this tick's circuits."""
+        return self._tick(t_now, capped=True)
+
+    def _flow_budget(self) -> int | None:
+        """Tentative flows the engine can still take under the policy cap
+        (None = uncapped): the backlog the event loop re-derives each tick
+        never exceeds ``max_pending_flows`` plus what commits free up."""
+        cap = self.config.admission
+        if cap is None or cap.max_pending_flows is None:
+            return None
+        return max(0, cap.max_pending_flows - self.state.n_pending_flows)
+
+    def _tick(self, t_now: float, *, capped: bool) -> TickReport:
         t0 = time.perf_counter()
-        admitted = self.queue.drain(t_now, self.state.commit_floor)
+        q = self.queue
+        before = (q.deferred, q.shed, q.backfilled)
+        admitted = q.drain(t_now, self.state.commit_floor,
+                           flow_budget=self._flow_budget() if capped
+                           else None)
         gid0 = self.state.n_coflows
         try:
             commit = self.state.step(
@@ -199,7 +252,10 @@ class FabricManager:
             pending_flows=commit.n_pending, queue_depth=self.queue.depth,
             wall_s=end - t0, program=program,
             aborted=sum(app.n_aborted for app in commit.faults),
-            unfinalized=len(commit.unfinalized))
+            unfinalized=len(commit.unfinalized),
+            deferred=q.deferred - before[0], shed=q.shed - before[1],
+            backfilled=q.backfilled - before[2],
+            standby_depth=q.standby_depth)
         self.reports.append(report)
         self._n_ticks += 1
         self._flows_committed += commit.n_flows
@@ -209,12 +265,20 @@ class FabricManager:
         return report
 
     def flush(self) -> TickReport:
-        """End-of-stream: commit everything still pending or queued."""
+        """End-of-stream: commit everything still pending, queued, or shed.
+
+        Standby requests are recalled first and the closing ticks run with
+        the flow budget off — the cap bounds per-tick scheduling work in
+        steady state, but at end-of-stream there is no next tick to defer
+        to, and the policy's contract is that shed work is deferred, never
+        silently lost (only ``rejected``/``dropped`` requests are gone)."""
+        self.queue.recall_standby()
         if self.queue.depth:
             # admit every queued request at its own release, then finalize
-            self.tick(max(self.queue.max_release,
-                          np.nextafter(self.state.t_now, np.inf)))
-        return self.tick(np.inf)
+            self._tick(max(self.queue.max_release,
+                           np.nextafter(self.state.t_now, np.inf)),
+                       capped=False)
+        return self._tick(np.inf, capped=False)
 
     # -- fault plane --------------------------------------------------------
     def _register_fault(self, app) -> FaultReport:
@@ -294,12 +358,24 @@ class FabricManager:
             inst, releases = inst.inst, inst.releases
         # A degraded fabric (cores down) schedules over the survivors only;
         # the up-mask fingerprint keeps degraded programs from ever hitting
-        # healthy-fabric cache entries (and vice versa). Healthy keys are
+        # healthy-fabric cache entries (and vice versa). Drifted per-core
+        # reconfiguration delays (fault.DeltaDrift) likewise join the
+        # fingerprint: a drift re-keys every request, so stale
+        # nominal-delta programs are never served while the drift holds —
+        # and drifting back to nominal restores the original keys (the old
+        # entries hit again, still byte-correct). Healthy keys are
         # byte-identical to the pre-fault scheme.
         up = self.state.core_up
         degraded = not bool(up.all())
-        fingerprint = ("" if not degraded
-                       else "up=" + "".join("1" if u else "0" for u in up))
+        drifted = self.state.delta_drifted
+        delta_k = self.state.delta_k.copy() if drifted else None
+        fp = []
+        if degraded:
+            fp.append("up=" + "".join("1" if u else "0" for u in up))
+        if drifted:
+            fp.append("delta_k="
+                      + ",".join(repr(float(d)) for d in delta_k))
+        fingerprint = ";".join(fp)
         key = instance_key(inst, releases, algorithm=algorithm,
                            scheduling=scheduling, seed=seed, backend=backend,
                            fabric=fingerprint)
@@ -312,6 +388,7 @@ class FabricManager:
         if not hit:
             run_inst = inst
             up_idx = None
+            run_delta_k = delta_k
             if degraded:
                 if inst.K != self.state.K:
                     raise ValueError(
@@ -321,15 +398,27 @@ class FabricManager:
                 run_inst = Instance(coflows=inst.coflows,
                                     rates=inst.rates[up_idx],
                                     delta=inst.delta)
+                if drifted:
+                    run_delta_k = delta_k[up_idx]
+            if drifted and inst.K != self.state.K:
+                raise ValueError(
+                    f"instance has K={inst.K} cores but the drifted fabric "
+                    f"has K={self.state.K}; cannot price per-core delays")
             if releases is None:
                 s = run_fast(run_inst, algorithm, seed=seed,
-                             scheduling=scheduling, backend=backend)
+                             scheduling=scheduling, backend=backend,
+                             delta_k=run_delta_k)
             else:
                 s = run_fast_online(
                     OnlineInstance(inst=run_inst, releases=releases),
                     algorithm, seed=seed, scheduling=scheduling,
-                    backend=backend)
+                    backend=backend, delta_k=run_delta_k)
             canonical = compile_schedule(s, index_labels=True)
+            if drifted:
+                # stamp each segment's delay in force so emitted programs
+                # (and the referee) see the drifted establish->start gap
+                canonical = dataclasses.replace(
+                    canonical, delta_seg=run_delta_k[canonical.core])
             if degraded:
                 # back to physical core labels + the full-fabric rate vector
                 # (up_idx is monotone, so the canonical sort order holds)
@@ -373,6 +462,19 @@ class FabricManager:
                                  if self._n_ticks else 0.0),
             "rejected": self.queue.rejected,
             "late_arrivals": self.queue.late,
+            # overload-policy accounting (exact; see admission.py):
+            # admitted + queued + standby + rejected + dropped == submitted
+            "deferred": self.queue.deferred,
+            "shed": self.queue.shed,
+            "backfilled": self.queue.backfilled,
+            "dropped": self.queue.dropped,
+            "standby_depth": self.queue.standby_depth,
+            "pending_flows": self.state.n_pending_flows,
+            # delta-scheduling effectiveness + retention GC
+            "tent_reused": self.state.tent_reused,
+            "tent_recomputed": self.state.tent_recomputed,
+            "commits_retained": self.state.n_commits_retained,
+            "commits_gced": self.state.commits_gced,
             "cache_hits": self.cache.hits,
             "cache_misses": self.cache.misses,
             "cache_hit_rate": self.cache.hit_rate,

@@ -1,0 +1,349 @@
+"""PR-6 fixes for the PR-5 fault-model residue:
+
+  1. the one-shot plane used to ignore per-core ``DeltaDrift`` — cached
+     programs priced the nominal delta. Now the drift joins the cache
+     fingerprint and ``run_fast(delta_k=...)`` prices it; emitted programs
+     carry the drifted establish->start gap in ``delta_seg``.
+  2. ``CoreUp`` used to keep the dead core's stale load history in the
+     assignment state, under-using the recovered core indefinitely. Now the
+     recovered core's load is reset (it delivered nothing while dark).
+  3. committed-circuit retention grew without bound. Now a
+     ``fault_lookback`` watermark garbage-collects commits that no
+     admissible fault can ever abort, with an exact-count telemetry counter
+     and unchanged fault classification inside the watermark.
+
+If ``hypothesis`` is installed the core-up rebalance property runs under
+it; otherwise a seeded parametrize sweep covers the same predicate (the
+container does not ship hypothesis and nothing may be installed).
+"""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CoreDown,
+    CoreUp,
+    DeltaDrift,
+    FabricState,
+    FlatAssignState,
+    run_fast,
+    sample_online_instance,
+    synth_fb_trace,
+)
+from repro.service import FabricConfig, FabricManager
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container ships no hypothesis; seeded sweep instead
+    HAVE_HYPOTHESIS = False
+
+TRACE = synth_fb_trace(200, seed=2026)
+RATES = (10.0, 20.0, 30.0)
+DELTA = 8.0
+
+
+def _oinst(N=10, M=14, seed=0, span=120.0):
+    return sample_online_instance(TRACE, N=N, M=M, rates=RATES, delta=DELTA,
+                                  span=span, seed=seed)
+
+
+def _mgr(**kw):
+    cfg = dict(rates=RATES, delta=DELTA, N=10, max_queue_depth=256)
+    cfg.update(kw)
+    return FabricManager(FabricConfig(**cfg))
+
+
+# ---------------------------------------------------------------------------
+# residue 1: DeltaDrift reaches the one-shot plane + the cache fingerprint
+# ---------------------------------------------------------------------------
+
+class TestOneShotDrift:
+    def test_nominal_delta_k_is_bit_exact(self):
+        inst = _oinst(seed=1).inst
+        base = run_fast(inst, "ours")
+        nom = run_fast(inst, "ours",
+                       delta_k=np.full(inst.K, inst.delta))
+        assert np.array_equal(base.ccts, nom.ccts)
+
+    def test_drift_changes_oneshot_pricing(self):
+        inst = _oinst(seed=2).inst
+        drifted = np.full(inst.K, inst.delta)
+        drifted[1] = inst.delta * 6.0
+        s0 = run_fast(inst, "ours")
+        s1 = run_fast(inst, "ours", delta_k=drifted)
+        assert not np.array_equal(s0.ccts, s1.ccts)
+
+    def test_program_carries_drifted_delta_seg(self):
+        mgr = _mgr()
+        inst = _oinst(seed=3).inst
+        drift = 5.0 * DELTA
+        mgr.report_fault(DeltaDrift(t=0.0, core=1, delta=drift))
+        prog, hit = mgr.schedule_instance(inst)
+        assert not hit
+        assert prog.delta_seg is not None
+        expect = np.where(prog.core == 1, drift, DELTA)
+        assert np.array_equal(prog.delta_seg, expect)
+        prog.validate()  # the referee accepts the drifted gaps
+
+    def test_drift_rekeys_cache_and_nominal_restores(self):
+        mgr = _mgr()
+        inst = _oinst(seed=3).inst
+        p0, hit = mgr.schedule_instance(inst)
+        assert not hit
+        _, hit = mgr.schedule_instance(inst)
+        assert hit                      # healthy fabric: warm entry
+        mgr.report_fault(DeltaDrift(t=0.0, core=0, delta=3.0 * DELTA))
+        p1, hit = mgr.schedule_instance(inst)
+        assert not hit                  # drift re-keys: stale program unserved
+        _, hit = mgr.schedule_instance(inst)
+        assert hit                      # drifted entry is itself cacheable
+        mgr.report_fault(DeltaDrift(t=0.0, core=0, delta=DELTA))
+        p2, hit = mgr.schedule_instance(inst)
+        assert hit                      # back to nominal: original key hits
+        assert np.array_equal(p0.t_establish, p2.t_establish)
+        assert p2.delta_seg is None
+        assert p1.delta_seg is not None
+
+    def test_drifted_oneshot_matches_streaming_state(self):
+        # the same drift applied before any arrival must price identically
+        # in the one-shot engine and the incremental FabricState
+        oinst = _oinst(seed=4, span=0.0)
+        inst = oinst.inst
+        drifted = np.full(inst.K, inst.delta)
+        drifted[2] = inst.delta * 4.0
+        s = run_fast(inst, "ours", delta_k=drifted)
+        st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N)
+        st.apply_fault(DeltaDrift(t=0.0, core=2, delta=drifted[2]))
+        st.step(list(inst.coflows), [0.0] * inst.M, 0.0)
+        st.finalize()
+        assert np.array_equal(np.sort(s.ccts), np.sort(st.ccts()))
+
+
+# ---------------------------------------------------------------------------
+# residue 2: CoreUp resets the recovered core's load history
+# ---------------------------------------------------------------------------
+
+def _rebalance_counts(seed: int, K=3, n_ports=12, n_warm=120, n_probe=240):
+    """Warm a flat assignment state with core 0 masked out, then compare
+    post-recovery behavior with and without the reset. Returns
+    (reset share, stale share) of core 0 over the probe window."""
+    rng = np.random.default_rng(seed)
+    rates = np.full(K, 20.0)
+
+    def chunk(n):
+        return (rng.integers(0, n_ports, n).astype(np.int64),
+                rng.integers(0, n_ports, n).astype(np.int64),
+                rng.uniform(1.0, 50.0, n))
+
+    st = FlatAssignState("tau-aware", rates, DELTA, n_ports, seed=seed)
+    up = np.ones(K, dtype=bool)
+    up[0] = False
+    fi, fj, sz = chunk(n_warm)
+    st.assign(fi, fj, sz, up=up)       # core 0 dark: others absorb the load
+
+    stale = copy.deepcopy(st)          # PR-5 behavior: history kept
+    st.reset_core(0)                   # PR-6: recovered core starts clean
+    fi, fj, sz = chunk(n_probe)
+    got_reset = st.assign(fi.copy(), fj.copy(), sz.copy())
+    got_stale = stale.assign(fi, fj, sz)
+    return (float(np.mean(got_reset == 0)), float(np.mean(got_stale == 0)))
+
+
+def _check_rebalance(seed: int):
+    share_reset, share_stale = _rebalance_counts(seed)
+    # the reset must never give the recovered core LESS work than the stale
+    # history would, and must actually converge toward the healthy mix:
+    # with equal rates the fair share is 1/3, and the catch-up phase pulls
+    # the recovered core above it over the probe window
+    assert share_reset >= share_stale
+    assert share_reset >= 1.0 / 3.0 - 0.05
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=hyp_st.integers(min_value=0, max_value=2**16 - 1))
+    def test_core_up_rebalance_property(seed):
+        _check_rebalance(seed)
+else:
+    @pytest.mark.parametrize("seed", list(range(12)))
+    def test_core_up_rebalance_property(seed):
+        _check_rebalance(seed)
+
+
+def test_core_up_converges_to_healthy_mix():
+    # long after recovery the per-core shares must approach the healthy
+    # steady state (equal rates -> equal shares), not a permanently
+    # starved recovered core
+    rng = np.random.default_rng(7)
+    K, n_ports = 3, 12
+    st = FlatAssignState("tau-aware", np.full(K, 20.0), DELTA, n_ports,
+                         seed=7)
+    up = np.ones(K, dtype=bool)
+    up[0] = False
+    n = 150
+    st.assign(rng.integers(0, n_ports, n).astype(np.int64),
+              rng.integers(0, n_ports, n).astype(np.int64),
+              rng.uniform(1.0, 50.0, n), up=up)
+    st.reset_core(0)
+    m = 1200
+    got = st.assign(rng.integers(0, n_ports, m).astype(np.int64),
+                    rng.integers(0, n_ports, m).astype(np.int64),
+                    rng.uniform(1.0, 50.0, m))
+    shares = np.bincount(got, minlength=K) / m
+    assert np.all(np.abs(shares - 1.0 / K) < 0.12)
+
+
+def test_reset_core_keeps_drifted_delta():
+    # the reset clears LOAD, not hardware state: a drifted delay survives
+    st = FlatAssignState("tau-aware", np.array(RATES), DELTA, 8, seed=0)
+    st.set_delta(1, 40.0)
+    st.reset_core(1)
+    assert st._delta_c[1] == 40.0
+    assert st._drifted
+
+
+def test_reset_core_streaming_differential():
+    # FabricState drives reset_core through CoreUp; the post-recovery
+    # stream must be identical to a fresh state that saw the same demand
+    # with the same up/down history — asserted indirectly by the existing
+    # fault differential; here: recovery actually reuses the core
+    oinst = _oinst(seed=5, span=200.0)
+    inst = oinst.inst
+    st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                     track_commits=True)
+    t_hi = float(oinst.releases.max())
+    st.apply_fault(CoreDown(core=1, t=0.0))
+    order = np.argsort(oinst.releases, kind="stable")
+    first = [int(m) for m in order if oinst.releases[m] <= t_hi * 0.5]
+    st.step([inst.coflows[m] for m in first],
+            [float(oinst.releases[m]) for m in first], t_hi * 0.5)
+    st.apply_fault(CoreUp(core=1, t=t_hi * 0.5))
+    rest = [int(m) for m in order if oinst.releases[m] > t_hi * 0.5]
+    st.step([inst.coflows[m] for m in rest],
+            [float(oinst.releases[m]) for m in rest], t_hi)
+    tc = st.finalize()
+    assert (tc.core == 1).any()  # the recovered core carries new circuits
+
+
+# ---------------------------------------------------------------------------
+# residue 3: watermark GC over committed-circuit retention
+# ---------------------------------------------------------------------------
+
+def _drive_gc(lookback: float, fault_at: int | None = None,
+              event_core: int = 1, seed: int = 6):
+    """Drive one state through a fixed stream, optionally applying a
+    CoreDown just before tick index ``fault_at``. Returns the state plus
+    exact commit/abort tallies."""
+    oinst = _oinst(seed=seed, span=300.0)
+    inst = oinst.inst
+    st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                     track_commits=True, fault_lookback=lookback)
+    order = np.argsort(oinst.releases, kind="stable")
+    t_hi = float(oinst.releases.max())
+    ticks = np.linspace(t_hi * 0.2, t_hi * 1.8, 10)
+    nxt = 0
+    committed = 0
+    aborted = 0
+    apps = []
+    for i, t in enumerate(ticks):
+        if fault_at is not None and i == fault_at:
+            app = st.apply_fault(CoreDown(core=event_core,
+                                          t=float(t) - 1e-3))
+            apps.append(app)
+            aborted += app.n_aborted
+        batch, rel = [], []
+        while nxt < order.size and oinst.releases[order[nxt]] <= t:
+            m = int(order[nxt])
+            batch.append(inst.coflows[m])
+            rel.append(float(oinst.releases[m]))
+            nxt += 1
+        tc = st.step(batch, rel, float(t))
+        committed += int(tc.gid.size)
+    tc = st.finalize()
+    committed += int(tc.gid.size)
+    return st, apps, committed, aborted
+
+
+class TestRetentionGC:
+    def test_gc_actually_collects(self):
+        t_hi = float(_oinst(seed=6, span=300.0).releases.max())
+        st, _, committed, _ = _drive_gc(lookback=t_hi * 0.3)
+        assert st.commits_gced > 0
+        assert st.n_commits_retained < committed
+
+    def test_exact_count_invariant(self):
+        t_hi = float(_oinst(seed=6, span=300.0).releases.max())
+        for lookback, fault_at in ((np.inf, None), (t_hi * 0.4, None),
+                                   (t_hi * 0.4, 7)):
+            st, _, committed, aborted = _drive_gc(lookback, fault_at)
+            assert (st.commits_gced + st.n_commits_retained + aborted
+                    == committed), (lookback, fault_at)
+
+    def test_inf_lookback_never_collects(self):
+        st, _, committed, _ = _drive_gc(lookback=np.inf)
+        assert st.commits_gced == 0
+        assert st.n_commits_retained == committed
+
+    def test_classification_unchanged_inside_watermark(self):
+        # a fault inside the retention window must classify, abort, requeue
+        # and unfinalize EXACTLY as the unbounded-retention state does —
+        # including final CCTs (exercises the _gc_cct rollback base)
+        t_hi = float(_oinst(seed=6, span=300.0).releases.max())
+        st_inf, apps_inf, com_inf, ab_inf = _drive_gc(np.inf, fault_at=7)
+        st_gc, apps_gc, com_gc, ab_gc = _drive_gc(t_hi * 0.4, fault_at=7)
+        assert st_gc.commits_gced > 0  # the scenario must actually GC
+        assert (com_inf, ab_inf) == (com_gc, ab_gc)
+        a_inf, a_gc = apps_inf[0], apps_gc[0]
+        assert a_inf.requeued == a_gc.requeued
+        assert a_inf.unfinalized == a_gc.unfinalized
+        assert ({(c.gid, c.cid) for c in a_inf.aborted}
+                == {(c.gid, c.cid) for c in a_gc.aborted})
+        assert np.array_equal(st_inf.ccts(), st_gc.ccts())
+
+    def test_fault_before_watermark_rejected(self):
+        t_hi = float(_oinst(seed=6, span=300.0).releases.max())
+        st, _, _, _ = _drive_gc(lookback=t_hi * 0.2)
+        with pytest.raises(ValueError, match="retention watermark"):
+            st.apply_fault(CoreDown(core=0, t=0.0))
+
+    def test_finalize_does_not_advance_watermark(self):
+        # finalize (t=inf) is end-of-stream bookkeeping, not passage of
+        # time: it must not sweep the registry or poison later faults
+        oinst = _oinst(seed=8, span=50.0)
+        inst = oinst.inst
+        st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                         track_commits=True, fault_lookback=1e9)
+        rel = [float(r) for r in oinst.releases]
+        st.step(list(inst.coflows), rel, max(rel))
+        st.finalize()
+        assert st.n_commits_retained > 0
+        assert st.commits_gced == 0
+
+    def test_negative_lookback_rejected(self):
+        with pytest.raises(ValueError):
+            FabricState(rates=np.array(RATES), delta=DELTA, N=8,
+                        track_commits=True, fault_lookback=-1.0)
+
+    def test_manager_exposes_gc_telemetry(self):
+        oinst = _oinst(seed=9, span=200.0)
+        t_hi = float(oinst.releases.max())
+        mgr = _mgr(fault_lookback=t_hi * 0.3)
+        order = np.argsort(oinst.releases, kind="stable")
+        nxt = 0
+        for t in np.linspace(t_hi * 0.2, t_hi * 1.6, 8):
+            while (nxt < order.size
+                   and oinst.releases[order[nxt]] <= t):
+                m = int(order[nxt])
+                mgr.submit(oinst.inst.coflows[m],
+                           float(oinst.releases[m]))
+                nxt += 1
+            mgr.tick(float(t))
+        mgr.flush()
+        s = mgr.summary()
+        assert s["commits_gced"] > 0
+        assert s["commits_gced"] + s["commits_retained"] == s["flows_committed"]
