@@ -1,0 +1,182 @@
+"""reprolint: determinism & array-contract static analysis for this repo.
+
+Usage (tier-0 CI lane; also run locally before pushing)::
+
+    PYTHONPATH=src python -m repro.analysis.lint src/ tests/ benchmarks/
+    PYTHONPATH=src python -m repro.analysis.lint --json lint.json src/
+
+The differential suites (engine-vs-oracle bit-exactness, chunked
+PCG64 stream identity, delta-splice identity) *sample* the determinism
+invariants at runtime; reprolint checks them on every line at CI time.
+Rules are documented in DESIGN.md §Determinism invariants; findings can
+be suppressed inline with::
+
+    expr  # reprolint: disable=<rule>[,<rule>] -- <justification>
+
+The justification text is mandatory: a suppression without one (or
+naming an unknown rule) is itself a finding (``bad-suppression``) and
+the suppression is ignored.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+from pathlib import Path
+from typing import Iterable, Iterator
+
+from .common import Finding, Module, RULES, load_module
+from .contracts import build_registry, check_contracts
+from .determinism import check_determinism
+
+__all__ = ["LintReport", "lint_paths", "lint_files", "RULES"]
+
+#: directory names never descended into when walking a tree. The golden
+#: corpus is excluded on purpose: it exists to *fail* the linter and is
+#: linted explicitly by tests/test_reprolint.py (explicitly named files
+#: are always analyzed, walk exclusions notwithstanding).
+DEFAULT_EXCLUDES = {"lint_corpus", "__pycache__", ".git", "out",
+                    ".pytest_cache", ".mypy_cache"}
+
+
+@dataclasses.dataclass
+class LintReport:
+    findings: list[Finding]            # unsuppressed: these gate CI
+    suppressed: list[Finding]          # matched by a justified suppression
+    files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def by_rule(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "files": self.files,
+            "finding_count": len(self.findings),
+            "suppression_count": len(self.suppressed),
+            "by_rule": self.by_rule(),
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+        }
+
+
+def _collect(paths: Iterable[str | Path]) -> list[Path]:
+    out: list[Path] = []
+    seen: set[Path] = set()
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if any(part in DEFAULT_EXCLUDES for part in f.parts):
+                    continue
+                r = f.resolve()
+                if r not in seen:
+                    seen.add(r)
+                    out.append(f)
+        elif p.suffix == ".py":
+            r = p.resolve()
+            if r not in seen:
+                seen.add(r)
+                out.append(p)
+    return out
+
+
+def _lint_module(mod: Module, registry) -> Iterator[Finding]:
+    yield from check_determinism(mod)
+    yield from check_contracts(mod, registry)
+
+
+def _bad_suppressions(mod: Module) -> Iterator[Finding]:
+    for sup in mod.suppressions.values():
+        if sup.unknown:
+            yield Finding(
+                "bad-suppression", str(mod.path), sup.line, 0,
+                f"suppression names unknown rule(s) "
+                f"{', '.join(sup.unknown)}; the disable is ignored")
+        if not sup.justification.strip():
+            yield Finding(
+                "bad-suppression", str(mod.path), sup.line, 0,
+                "suppression without a justification (`-- <why>` is "
+                "mandatory); the disable is ignored")
+
+
+def lint_files(files: Iterable[Path], root: Path | None = None) -> LintReport:
+    modules: list[Module] = []
+    findings: list[Finding] = []
+    n_files = 0
+    for path in files:
+        n_files += 1
+        try:
+            mod = load_module(path, root=root)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "parse-error", str(path), e.lineno or 1, 0,
+                f"file does not parse: {e.msg}"))
+            continue
+        except OSError as e:
+            findings.append(Finding(
+                "parse-error", str(path), 1, 0, f"unreadable: {e}"))
+            continue
+        modules.append(mod)
+    registry = build_registry(modules)
+
+    kept: list[Finding] = list(findings)
+    suppressed: list[Finding] = []
+    for mod in modules:
+        kept.extend(_bad_suppressions(mod))
+        for f in _lint_module(mod, registry):
+            sup = mod.suppressions.get(f.line)
+            if sup is not None and sup.covers(f.rule):
+                suppressed.append(f)
+            else:
+                kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return LintReport(findings=kept, suppressed=suppressed, files=n_files)
+
+
+def lint_paths(paths: Iterable[str | Path],
+               root: Path | None = None) -> LintReport:
+    """Lint files/trees; directories are walked minus DEFAULT_EXCLUDES."""
+    if root is None:
+        root = Path.cwd()
+    return lint_files(_collect(paths), root=root)
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="determinism & array-contract static analysis")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report to PATH "
+                         "('-' for stdout)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-finding text output")
+    args = ap.parse_args(argv)
+
+    report = lint_paths(args.paths)
+    if args.json == "-":
+        print(json.dumps(report.to_dict(), indent=2))
+    elif args.json:
+        Path(args.json).write_text(
+            json.dumps(report.to_dict(), indent=2) + "\n", encoding="utf-8")
+    if not args.quiet:
+        for f in report.findings:
+            print(f.render())
+        by_rule = ", ".join(f"{r}={n}" for r, n in
+                            sorted(report.by_rule().items()))
+        status = "clean" if report.ok else f"FAILED ({by_rule})"
+        print(f"reprolint: {report.files} files, "
+              f"{len(report.findings)} findings, "
+              f"{len(report.suppressed)} suppressed -> {status}")
+    return 0 if report.ok else 1

@@ -1,0 +1,9 @@
+"""CLI entry point: ``python -m repro.analysis.lint src/ tests/ benchmarks/``."""
+from __future__ import annotations
+
+import sys
+
+from . import main
+
+if __name__ == "__main__":
+    sys.exit(main())

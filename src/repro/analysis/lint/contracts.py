@@ -1,0 +1,389 @@
+"""Array-contract checkers (RL20x): shape/dtype annotations + kernel rules.
+
+The contract modules (``core/engine.py``, ``core/assignment.py``,
+``core/coflow.py``, every ``service/*.py``) carry flat numpy arrays
+through their public signatures. These rules make the shapes part of
+the reviewed source instead of tribal knowledge:
+
+- ``contract-missing`` (RL201): public functions/methods in contract
+  modules must annotate every parameter and the return; array-typed
+  parameters must use ``Annotated[F8, "F"]``-style specs (see
+  ``repro.core.arrays``), and the spec string must parse.
+- ``shape-mismatch``  (RL202): at call sites inside contract modules,
+  when a passed argument is itself an annotated parameter of the caller,
+  its declared rank must match the callee's declared rank, and one
+  callee shape variable must not bind two different caller dims in the
+  same call.
+- ``kernel-fp64``     (RL203): inside Pallas kernel bodies (functions
+  with ``*_ref`` params under ``kernels/``), no fp64 types and no host
+  numpy — the PR-3 precision contract says kernel state is fp32.
+- ``blockspec-shape`` (RL204): literal ``BlockSpec`` tiles must be
+  positive and divide literal ``out_shape`` dims.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .common import (ArrSpec, Finding, FuncSpec, Module, dotted_name,
+                     parse_annotation)
+
+__all__ = ["is_contract_module", "build_registry", "check_contracts"]
+
+_CONTRACT_CORE = {"engine.py", "assignment.py", "coflow.py"}
+
+
+def is_contract_module(mod: Module) -> bool:
+    if mod.is_core and mod.basename in _CONTRACT_CORE:
+        return True
+    return mod.is_service and mod.basename != "__init__.py"
+
+
+# ----------------------------------------------------------------- registry
+
+def _func_spec(fn: ast.FunctionDef | ast.AsyncFunctionDef,
+               qual: str) -> FuncSpec:
+    params: list[str] = []
+    specs: dict[str, ArrSpec] = {}
+    for a in list(fn.args.posonlyargs) + list(fn.args.args):
+        params.append(a.arg)
+        info = parse_annotation(a.annotation)
+        if info.kind == "array" and info.spec:
+            specs[a.arg] = info.spec
+    for a in fn.args.kwonlyargs:
+        info = parse_annotation(a.annotation)
+        if info.kind == "array" and info.spec:
+            specs[a.arg] = info.spec
+    return FuncSpec(qualname=qual, line=fn.lineno, params=params,
+                    specs=specs, returns=parse_annotation(fn.returns))
+
+
+def build_registry(modules: list[Module]) -> dict[str, dict[str, FuncSpec]]:
+    """logical-path -> {qualname -> FuncSpec} over all contract modules."""
+    registry: dict[str, dict[str, FuncSpec]] = {}
+    for mod in modules:
+        if not is_contract_module(mod):
+            continue
+        table: dict[str, FuncSpec] = {}
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                table[node.name] = _func_spec(node, node.name)
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        qual = f"{node.name}.{sub.name}"
+                        table[qual] = _func_spec(sub, qual)
+        registry[mod.logical] = table
+    return registry
+
+
+# --------------------------------------------------------- contract-missing
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _decorator_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    out = set()
+    for d in fn.decorator_list:
+        node = d.func if isinstance(d, ast.Call) else d
+        if isinstance(node, ast.Attribute):
+            out.add(node.attr)
+        elif isinstance(node, ast.Name):
+            out.add(node.id)
+    return out
+
+
+def _check_signature(mod: Module, fn: ast.FunctionDef | ast.AsyncFunctionDef,
+                     qual: str) -> Iterator[Finding]:
+    decorators = _decorator_names(fn)
+    if "overload" in decorators:
+        return
+    args = list(fn.args.posonlyargs) + list(fn.args.args) + \
+        list(fn.args.kwonlyargs)
+    for i, a in enumerate(args):
+        if i == 0 and a.arg in ("self", "cls"):
+            continue
+        info = parse_annotation(a.annotation)
+        if info.kind == "missing":
+            yield Finding(
+                "contract-missing", str(mod.path), fn.lineno, fn.col_offset,
+                f"`{qual}`: parameter `{a.arg}` is unannotated (contract "
+                f"modules annotate every public signature)")
+        elif info.kind == "bare-array":
+            yield Finding(
+                "contract-missing", str(mod.path), fn.lineno, fn.col_offset,
+                f"`{qual}`: parameter `{a.arg}` is a bare array type; use "
+                f"`Annotated[F8, \"<dims>\"]` from repro.core.arrays")
+        elif info.spec_error:
+            yield Finding(
+                "contract-missing", str(mod.path), fn.lineno, fn.col_offset,
+                f"`{qual}`: parameter `{a.arg}`: {info.spec_error}")
+    ret = parse_annotation(fn.returns)
+    if ret.kind == "missing":
+        yield Finding(
+            "contract-missing", str(mod.path), fn.lineno, fn.col_offset,
+            f"`{qual}`: missing return annotation (annotate `-> None` "
+            f"explicitly when nothing is returned)")
+    elif ret.kind == "bare-array":
+        yield Finding(
+            "contract-missing", str(mod.path), fn.lineno, fn.col_offset,
+            f"`{qual}`: bare array return type; use "
+            f"`Annotated[F8, \"<dims>\"]` from repro.core.arrays")
+    elif ret.spec_error:
+        yield Finding(
+            "contract-missing", str(mod.path), fn.lineno, fn.col_offset,
+            f"`{qual}`: return annotation: {ret.spec_error}")
+
+
+def _is_dunder(name: str) -> bool:
+    return name.startswith("__") and name.endswith("__")
+
+
+def _check_contract_missing(mod: Module) -> Iterator[Finding]:
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_public(node.name) and not _is_dunder(node.name):
+                yield from _check_signature(mod, node, node.name)
+        elif isinstance(node, ast.ClassDef) and _is_public(node.name):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and _is_public(sub.name) and not _is_dunder(sub.name):
+                    yield from _check_signature(
+                        mod, sub, f"{node.name}.{sub.name}")
+
+
+# ----------------------------------------------------------- shape-mismatch
+
+def _local_callables(mod: Module,
+                     registry: dict[str, dict[str, FuncSpec]]
+                     ) -> dict[str, FuncSpec]:
+    """Callables resolvable by bare name in this module: same-module defs
+    plus functions imported from other contract modules."""
+    out: dict[str, FuncSpec] = {}
+    for logical, table in registry.items():
+        if logical == mod.logical:
+            for qual, spec in table.items():
+                if "." not in qual:
+                    out[qual] = spec
+    for name, target in mod.aliases.items():
+        leaf = target.rsplit(".", 1)[-1]
+        for logical, table in registry.items():
+            if leaf in table and "." not in leaf:
+                mod_path = target.rsplit(".", 1)[0].replace(".", "/")
+                if logical.endswith(mod_path + ".py"):
+                    out[name] = table[leaf]
+    return out
+
+
+def _enclosing_specs(fn: ast.FunctionDef | ast.AsyncFunctionDef
+                     ) -> dict[str, ArrSpec]:
+    specs: dict[str, ArrSpec] = {}
+    for a in (list(fn.args.posonlyargs) + list(fn.args.args)
+              + list(fn.args.kwonlyargs)):
+        info = parse_annotation(a.annotation)
+        if info.kind == "array" and info.spec:
+            specs[a.arg] = info.spec
+    return specs
+
+
+def _check_shape_mismatch(mod: Module,
+                          registry: dict[str, dict[str, FuncSpec]]
+                          ) -> Iterator[Finding]:
+    if mod.logical not in registry:
+        return
+    callables = _local_callables(mod, registry)
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        caller_specs = _enclosing_specs(fn)
+        if not caller_specs:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) or \
+                    not isinstance(node.func, ast.Name):
+                continue
+            callee = callables.get(node.func.id)
+            if callee is None:
+                continue
+            bindings: dict[str, str] = {}   # callee dim var -> caller dim
+            pairs: list[tuple[str, ast.expr]] = []
+            offset = 1 if callee.params[:1] == ["self"] else 0
+            for i, arg in enumerate(node.args):
+                if i + offset < len(callee.params):
+                    pairs.append((callee.params[i + offset], arg))
+            for kw in node.keywords:
+                if kw.arg:
+                    pairs.append((kw.arg, kw.value))
+            for pname, arg in pairs:
+                callee_spec = callee.specs.get(pname)
+                if callee_spec is None or not isinstance(arg, ast.Name):
+                    continue
+                caller_spec = caller_specs.get(arg.id)
+                if caller_spec is None:
+                    continue
+                if callee_spec.ndim != caller_spec.ndim:
+                    yield Finding(
+                        "shape-mismatch", str(mod.path), node.lineno,
+                        node.col_offset,
+                        f"`{callee.qualname}({pname}=...)` declares rank "
+                        f"{callee_spec.ndim} "
+                        f"(\"{' '.join(callee_spec.dims)}\") but caller "
+                        f"passes `{arg.id}` declared rank "
+                        f"{caller_spec.ndim} "
+                        f"(\"{' '.join(caller_spec.dims)}\")")
+                    continue
+                for cv, dv in zip(callee_spec.dims, caller_spec.dims):
+                    if cv == "*" or dv == "*":
+                        continue
+                    if cv.isdigit() and dv.isdigit() and cv != dv:
+                        yield Finding(
+                            "shape-mismatch", str(mod.path), node.lineno,
+                            node.col_offset,
+                            f"`{callee.qualname}({pname}=...)`: literal dim "
+                            f"{cv} != passed literal dim {dv}")
+                        continue
+                    if cv.isdigit() or dv.isdigit():
+                        continue
+                    seen = bindings.setdefault(cv, dv)
+                    if seen != dv:
+                        yield Finding(
+                            "shape-mismatch", str(mod.path), node.lineno,
+                            node.col_offset,
+                            f"`{callee.qualname}`: shape variable `{cv}` "
+                            f"bound to both `{seen}` and `{dv}` in one call")
+
+
+# --------------------------------------------------------------- RL203/204
+
+def _kernel_bodies(mod: Module):
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names = [a.arg for a in node.args.args + node.args.posonlyargs]
+            if any(n.endswith("_ref") for n in names):
+                yield node
+
+
+def _check_kernel_fp64(mod: Module) -> Iterator[Finding]:
+    for fn in _kernel_bodies(mod):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Attribute) and node.attr in (
+                    "float64", "double"):
+                yield Finding(
+                    "kernel-fp64", str(mod.path), node.lineno,
+                    node.col_offset,
+                    "fp64 inside a Pallas kernel body: the kernel precision "
+                    "contract is fp32 (PR-3); accumulate in float32")
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "astype":
+                    if any(isinstance(a, ast.Name) and a.id == "float"
+                           for a in node.args):
+                        yield Finding(
+                            "kernel-fp64", str(mod.path), node.lineno,
+                            node.col_offset,
+                            "`.astype(float)` promotes to fp64 inside a "
+                            "Pallas kernel body; use jnp.float32")
+                for kw in node.keywords:
+                    if kw.arg == "dtype" and isinstance(kw.value, ast.Name) \
+                            and kw.value.id == "float":
+                        yield Finding(
+                            "kernel-fp64", str(mod.path), node.lineno,
+                            node.col_offset,
+                            "`dtype=float` is fp64 inside a Pallas kernel "
+                            "body; use jnp.float32")
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Attribute) and node.attr in (
+                    "float64", "double"):
+                continue        # already reported by the fp64 check above
+            dotted = dotted_name(node, mod.aliases) if isinstance(
+                node, ast.Attribute) else None
+            if dotted and dotted.startswith("numpy."):
+                yield Finding(
+                    "kernel-fp64", str(mod.path), node.lineno,
+                    node.col_offset,
+                    f"host numpy (`{dotted}`) inside a Pallas kernel body; "
+                    f"kernels trace jnp/pl only (host numpy silently "
+                    f"promotes to fp64)")
+
+
+def _literal_tuple(node: ast.expr | None) -> tuple[int, ...] | None:
+    if isinstance(node, ast.Tuple) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, int)
+            for e in node.elts):
+        return tuple(e.value for e in node.elts)
+    return None
+
+
+def _blockspec_tiles(node: ast.expr) -> tuple[ast.Call, tuple] | None:
+    if isinstance(node, ast.Call):
+        f = node.func
+        leaf = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else "")
+        if leaf == "BlockSpec" and node.args:
+            return node, (node.args[0],)
+    return None
+
+
+def _check_blockspec(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        leaf = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else "")
+        if leaf == "BlockSpec" and node.args:
+            tiles = _literal_tuple(node.args[0])
+            if tiles is not None and any(t <= 0 for t in tiles):
+                yield Finding(
+                    "blockspec-shape", str(mod.path), node.lineno,
+                    node.col_offset,
+                    f"BlockSpec tile {tiles} has a non-positive extent")
+        if leaf == "pallas_call":
+            yield from _check_pallas_call(mod, node)
+
+
+def _check_pallas_call(mod: Module, call: ast.Call) -> Iterator[Finding]:
+    out_shape: tuple[int, ...] | None = None
+    out_tiles: tuple[int, ...] | None = None
+    for kw in call.keywords:
+        if kw.arg == "out_shape" and isinstance(kw.value, ast.Call):
+            inner = kw.value
+            leaf = (inner.func.attr if isinstance(inner.func, ast.Attribute)
+                    else inner.func.id if isinstance(inner.func, ast.Name)
+                    else "")
+            if leaf == "ShapeDtypeStruct" and inner.args:
+                out_shape = _literal_tuple(inner.args[0])
+        if kw.arg == "out_specs":
+            spec = _blockspec_tiles(kw.value)
+            if spec is not None:
+                out_tiles = _literal_tuple(spec[1][0])
+    if out_shape is None or out_tiles is None:
+        return
+    if len(out_shape) != len(out_tiles):
+        yield Finding(
+            "blockspec-shape", str(mod.path), call.lineno, call.col_offset,
+            f"out_specs tile rank {len(out_tiles)} != out_shape rank "
+            f"{len(out_shape)}")
+        return
+    for dim, tile in zip(out_shape, out_tiles):
+        if tile > 0 and dim % tile != 0:
+            yield Finding(
+                "blockspec-shape", str(mod.path), call.lineno,
+                call.col_offset,
+                f"BlockSpec tile {tile} does not divide out_shape dim "
+                f"{dim}: the trailing block would read out of bounds")
+
+
+# ------------------------------------------------------------------- driver
+
+def check_contracts(mod: Module,
+                    registry: dict[str, dict[str, FuncSpec]]
+                    ) -> Iterator[Finding]:
+    if is_contract_module(mod):
+        yield from _check_contract_missing(mod)
+        yield from _check_shape_mismatch(mod, registry)
+    if mod.is_kernels:
+        yield from _check_kernel_fp64(mod)
+        yield from _check_blockspec(mod)

@@ -1,0 +1,55 @@
+"""Array-contract annotation aliases for flat-array signatures.
+
+Every public function that takes or returns a flat numpy array in the
+contract modules (``core/engine.py``, ``core/assignment.py``,
+``core/coflow.py``, ``service/*``) annotates it as::
+
+    def run(sizes: Annotated[F8, "F"], choice: Annotated[I8, "F"]) -> ...
+
+The alias carries the dtype (``F8`` = float64, ``I8`` = int64, ``B1`` =
+bool, ``F4``/``I4`` = the 32-bit variants used at the Pallas boundary) and
+the string carries the shape: space-separated dimension names, so the
+number of tokens is the rank and repeated names assert equal extents
+across a signature. The dimension vocabulary used across the repo:
+
+    ``F``  flows            ``M`` coflows           ``N`` ports
+    ``K``  cores            ``G`` coflow groups     ``B`` arrival batch
+    ``S``  program segments ``E`` events            ``R`` resources (2*K*N)
+
+Literal extents are spelled as integers (``"F 2"``) and ``"*"`` is a
+single wildcard dimension whose extent is unchecked. A scalar array
+(0-d) is the empty spec ``""`` — in practice plain ``float``/``int`` is
+preferred.
+
+``reprolint`` (``python -m repro.analysis.lint``) enforces the
+convention statically: rule ``contract-missing`` requires the
+annotations on public contract-module signatures, and ``shape-mismatch``
+checks rank consistency at call sites. mypy sees straight through
+``Annotated`` to the ``NDArray`` alias, so the specs cost nothing at
+type-check time and nothing at runtime (all contract modules use
+``from __future__ import annotations``).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Annotated, TypeAlias
+
+import numpy as np
+import numpy.typing as npt
+
+__all__ = ["F8", "F4", "I8", "I4", "B1", "Arr", "Annotated"]
+
+if TYPE_CHECKING:
+    F8: TypeAlias = npt.NDArray[np.float64]
+    F4: TypeAlias = npt.NDArray[np.float32]
+    I8: TypeAlias = npt.NDArray[np.int64]
+    I4: TypeAlias = npt.NDArray[np.int32]
+    B1: TypeAlias = npt.NDArray[np.bool_]
+    #: Any-dtype escape hatch for arrays whose dtype is data-dependent.
+    Arr: TypeAlias = npt.NDArray[np.generic]
+else:  # pragma: no cover - runtime aliases (kept cheap; never subscripted)
+    F8 = npt.NDArray[np.float64]
+    F4 = npt.NDArray[np.float32]
+    I8 = npt.NDArray[np.int64]
+    I4 = npt.NDArray[np.int32]
+    B1 = npt.NDArray[np.bool_]
+    Arr = npt.NDArray[np.generic]

@@ -13,9 +13,11 @@ deterministic.
 from __future__ import annotations
 
 import dataclasses
+from typing import Annotated
 
 import numpy as np
 
+from .arrays import B1, F8, I8
 from .coflow import Flow, Instance, extract_flows, nonzero_flows
 from .lower_bounds import CoreState
 
@@ -43,7 +45,7 @@ class Assignment:
     """Result of the assignment phase for a whole instance."""
 
     inst: Instance
-    pi: np.ndarray                      # global order (coflow indices)
+    pi: Annotated[I8, "M"]              # global order (coflow indices)
     flows: list[list[AssignedFlow]]     # indexed by position m in pi
     state: CoreState                    # final prefix state (for bound checks)
     # Running cumulative per-core demand for prefix_per_core: _cum holds
@@ -53,14 +55,14 @@ class Assignment:
     _cum_upto: int = dataclasses.field(
         default=-1, init=False, repr=False, compare=False)
 
-    def per_core_demand(self, m_pos: int) -> np.ndarray:
+    def per_core_demand(self, m_pos: int) -> Annotated[F8, "K N N"]:
         """D^k_{pi(m)} for every core: (K, N, N)."""
         out = np.zeros((self.inst.K, self.inst.N, self.inst.N))
         for af in self.flows[m_pos]:
             out[af.core, af.flow.i, af.flow.j] += af.flow.size
         return out
 
-    def prefix_per_core(self, m_pos: int) -> np.ndarray:
+    def prefix_per_core(self, m_pos: int) -> Annotated[F8, "K N N"]:
         """D^k_{1:m} (inclusive) for every core: (K, N, N).
 
         Caches the running cumulative demand, so a forward scan over all
@@ -91,7 +93,7 @@ def _iter_coflow_flows(inst: Instance, pi: np.ndarray) -> list[list[Flow]]:
     ]
 
 
-def assign_tau_aware(inst: Instance, pi: np.ndarray) -> Assignment:
+def assign_tau_aware(inst: Instance, pi: Annotated[I8, "M"]) -> Assignment:
     """The paper's greedy tau-aware assignment (Alg. 1, lines 5-17)."""
     state = CoreState(K=inst.K, N=inst.N, rates=inst.rates, delta=inst.delta)
     out: list[list[AssignedFlow]] = []
@@ -106,7 +108,7 @@ def assign_tau_aware(inst: Instance, pi: np.ndarray) -> Assignment:
     return Assignment(inst=inst, pi=pi, flows=out, state=state)
 
 
-def assign_rho_only(inst: Instance, pi: np.ndarray) -> Assignment:
+def assign_rho_only(inst: Instance, pi: Annotated[I8, "M"]) -> Assignment:
     """RHO-ASSIGN: tau-blind — minimize rho^k_{1:m}/r^k after placement."""
     state = CoreState(K=inst.K, N=inst.N, rates=inst.rates, delta=inst.delta)
     out: list[list[AssignedFlow]] = []
@@ -121,7 +123,8 @@ def assign_rho_only(inst: Instance, pi: np.ndarray) -> Assignment:
     return Assignment(inst=inst, pi=pi, flows=out, state=state)
 
 
-def assign_random(inst: Instance, pi: np.ndarray, *, seed: int = 0) -> Assignment:
+def assign_random(inst: Instance, pi: Annotated[I8, "M"], *,
+                  seed: int = 0) -> Assignment:
     """RAND-ASSIGN: core k with probability proportional to r^k."""
     rng = np.random.default_rng(seed)
     probs = inst.rates / inst.R
@@ -172,8 +175,8 @@ class FlatAssignState:
     the whole history each tick.
     """
 
-    def __init__(self, policy: str, rates, delta: float, n_ports: int, *,
-                 seed: int = 0):
+    def __init__(self, policy: str, rates: Annotated[F8, "K"], delta: float,
+                 n_ports: int, *, seed: int = 0) -> None:
         if policy not in ASSIGN_POLICIES:
             raise ValueError(
                 f"unknown policy {policy!r}; one of {ASSIGN_POLICIES}")
@@ -242,8 +245,9 @@ class FlatAssignState:
                               float(self.rates[k]))
             self._rho[k] = 0.0
 
-    def assign(self, fi: np.ndarray, fj: np.ndarray, sizes: np.ndarray,
-               *, up: np.ndarray | None = None) -> np.ndarray:
+    def assign(self, fi: Annotated[I8, "F"], fj: Annotated[I8, "F"],
+               sizes: Annotated[F8, "F"], *,
+               up: Annotated[B1, "K"] | None = None) -> Annotated[I8, "F"]:
         """Assign one chunk of flows (in global arrival order), mutating the
         persistent state; returns the ``(len(fi),)`` int64 core choices.
 
@@ -285,7 +289,9 @@ class FlatAssignState:
         ch = self._rng.choice(up_arr.size, size=fi.size, p=p)
         return up_arr[ch].astype(np.int64)
 
-    def _assign_tau_aware(self, fi, fj, sizes) -> np.ndarray:
+    def _assign_tau_aware(self, fi: Annotated[I8, "F"],
+                          fj: Annotated[I8, "F"],
+                          sizes: Annotated[F8, "F"]) -> np.ndarray:
         """Flat greedy tau-aware choices; mirrors CoreState candidate/assign.
 
         Per-core state lives in plain Python lists (K is small, single
@@ -336,7 +342,10 @@ class FlatAssignState:
             t += 1
         return choices
 
-    def _assign_tau_aware_sub(self, fi, fj, sizes, up_idx: list) -> np.ndarray:
+    def _assign_tau_aware_sub(self, fi: Annotated[I8, "F"],
+                              fj: Annotated[I8, "F"],
+                              sizes: Annotated[F8, "F"],
+                              up_idx: list[int]) -> np.ndarray:
         """Tau-aware choices over a core subset, with per-core delta.
 
         Expression-for-expression the same IEEE ops as the unrestricted hot
@@ -388,7 +397,10 @@ class FlatAssignState:
             t += 1
         return choices
 
-    def _assign_rho_only_sub(self, fi, fj, sizes, up_idx: list) -> np.ndarray:
+    def _assign_rho_only_sub(self, fi: Annotated[I8, "F"],
+                             fj: Annotated[I8, "F"],
+                             sizes: Annotated[F8, "F"],
+                             up_idx: list[int]) -> np.ndarray:
         """RHO-ASSIGN choices over a core subset (same ops as the hot loop)."""
         cores, cur_rho = self._cores, self._rho
         choices = np.empty(fi.size, dtype=np.int64)
@@ -423,7 +435,9 @@ class FlatAssignState:
             t += 1
         return choices
 
-    def _assign_rho_only(self, fi, fj, sizes) -> np.ndarray:
+    def _assign_rho_only(self, fi: Annotated[I8, "F"],
+                         fj: Annotated[I8, "F"],
+                         sizes: Annotated[F8, "F"]) -> np.ndarray:
         """Flat RHO-ASSIGN choices; mirrors CoreState.candidate_rho_bounds.
 
         The oracle recomputes ``rho^k_{1:m}`` from scratch per flow (an
@@ -465,24 +479,28 @@ class FlatAssignState:
         return choices
 
 
-def _flat_tau_aware(fi, fj, sizes, rates, delta: float, n_ports: int) -> np.ndarray:
+def _flat_tau_aware(fi: Annotated[I8, "F"], fj: Annotated[I8, "F"],
+                    sizes: Annotated[F8, "F"], rates: Annotated[F8, "K"],
+                    delta: float, n_ports: int) -> np.ndarray:
     """One-shot tau-aware choices (a fresh ``FlatAssignState`` per call)."""
     return FlatAssignState("tau-aware", rates, delta, n_ports).assign(fi, fj, sizes)
 
 
-def _flat_rho_only(fi, fj, sizes, rates, n_ports: int) -> np.ndarray:
+def _flat_rho_only(fi: Annotated[I8, "F"], fj: Annotated[I8, "F"],
+                   sizes: Annotated[F8, "F"], rates: Annotated[F8, "K"],
+                   n_ports: int) -> np.ndarray:
     """One-shot RHO-ASSIGN choices (a fresh ``FlatAssignState`` per call)."""
     return FlatAssignState("rho-only", rates, 0.0, n_ports).assign(fi, fj, sizes)
 
 
 def assign_fast(
     inst: Instance,
-    pi: np.ndarray,
+    pi: Annotated[I8, "M"],
     policy: str = "tau-aware",
     *,
     seed: int = 0,
     flows: tuple[np.ndarray, ...] | None = None,
-) -> np.ndarray:
+) -> Annotated[I8, "F"]:
     """Flat-array assignment: per-flow core choices without Flow objects.
 
     ``flows`` is the ``(pos, cid, fi, fj, size)`` tuple from
@@ -508,9 +526,9 @@ def assign_fast(
 
 def assignment_from_choices(
     inst: Instance,
-    pi: np.ndarray,
+    pi: Annotated[I8, "M"],
     flows: tuple[np.ndarray, ...],
-    choices: np.ndarray,
+    choices: Annotated[I8, "F"],
 ) -> Assignment:
     """Materialize a full :class:`Assignment` from flat arrays + choices.
 

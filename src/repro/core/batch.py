@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Iterable, Sequence
+from typing import Any, Iterable, Iterator, Sequence
 
 import numpy as np
 
@@ -58,16 +58,16 @@ class SweepRow:
 class ResultTable:
     """A list of ``SweepRow``s with pandas-free slicing helpers."""
 
-    def __init__(self, rows: Sequence[SweepRow]):
+    def __init__(self, rows: Sequence[SweepRow]) -> None:
         self.rows = list(rows)
 
     def __len__(self) -> int:
         return len(self.rows)
 
-    def __iter__(self):
+    def __iter__(self) -> Iterator[SweepRow]:
         return iter(self.rows)
 
-    def filter(self, **where) -> "ResultTable":
+    def filter(self, **where: Any) -> "ResultTable":
         """Rows matching all given column=value constraints."""
         out = [
             r for r in self.rows
@@ -75,7 +75,7 @@ class ResultTable:
         ]
         return ResultTable(out)
 
-    def column(self, name: str, **where) -> np.ndarray:
+    def column(self, name: str, **where: Any) -> np.ndarray:
         """Column values of the rows matching ``where``.
 
         Raises ``ValueError`` when the filter matches no rows (a silent empty
@@ -88,7 +88,7 @@ class ResultTable:
                 f"no rows match filter {where!r} (table has {len(self.rows)} rows)")
         return np.array([getattr(r, name) for r in rows])
 
-    def mean(self, name: str, **where) -> float:
+    def mean(self, name: str, **where: Any) -> float:
         return float(self.column(name, **where).mean())
 
     def to_dicts(self) -> list[dict]:
@@ -122,7 +122,7 @@ def _start_method() -> str:
     return "fork"
 
 
-def _run_one(payload) -> SweepRow:
+def _run_one(payload: tuple) -> SweepRow:
     """Worker body: one grid point -> SweepRow. Must stay picklable."""
     (idx, inst, rel, alg, sched, seed, check, backend, materialize) = payload
     from .engine import (

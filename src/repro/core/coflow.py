@@ -9,9 +9,11 @@ All core-level computations are float64 numpy (control-plane code).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Annotated, Sequence
 
 import numpy as np
+
+from .arrays import F8, I8
 
 __all__ = [
     "Coflow",
@@ -32,7 +34,7 @@ class Coflow:
     """One coflow: an ``N x N`` demand matrix plus a positive weight."""
 
     cid: int
-    demand: np.ndarray  # (N, N) float64, >= 0
+    demand: Annotated[F8, "N N"]  # >= 0
     weight: float = 1.0
 
     def __post_init__(self) -> None:
@@ -86,7 +88,7 @@ class Instance:
     """
 
     coflows: tuple[Coflow, ...]
-    rates: np.ndarray  # (K,) float64 > 0
+    rates: Annotated[F8, "K"]  # > 0
     delta: float
 
     def __post_init__(self) -> None:
@@ -123,7 +125,7 @@ class Instance:
         return float(self.rates.max())
 
     @property
-    def weights(self) -> np.ndarray:
+    def weights(self) -> Annotated[F8, "M"]:
         return np.array([c.weight for c in self.coflows], dtype=np.float64)
 
     @property
@@ -147,7 +149,7 @@ class OnlineInstance:
     """
 
     inst: Instance
-    releases: np.ndarray  # (M,) float64 >= 0
+    releases: Annotated[F8, "M"]  # >= 0
 
     def __post_init__(self) -> None:
         r = np.asarray(self.releases, dtype=np.float64)
@@ -159,17 +161,17 @@ class OnlineInstance:
         object.__setattr__(self, "releases", r)
 
 
-def row_loads(D: np.ndarray) -> np.ndarray:
+def row_loads(D: Annotated[F8, "N N"]) -> Annotated[F8, "N"]:
     """d_{m,i} = sum_j d_m(i, j) for every ingress port i."""
     return np.asarray(D, dtype=np.float64).sum(axis=1)
 
 
-def col_loads(D: np.ndarray) -> np.ndarray:
+def col_loads(D: Annotated[F8, "N N"]) -> Annotated[F8, "N"]:
     """d_{m,j} = sum_i d_m(i, j) for every egress port j."""
     return np.asarray(D, dtype=np.float64).sum(axis=0)
 
 
-def rho(D: np.ndarray) -> float:
+def rho(D: Annotated[F8, "N N"]) -> float:
     """Maximum port load: max over all row sums and column sums."""
     D = np.asarray(D, dtype=np.float64)
     if D.size == 0:
@@ -177,7 +179,7 @@ def rho(D: np.ndarray) -> float:
     return float(max(row_loads(D).max(), col_loads(D).max()))
 
 
-def tau(D: np.ndarray) -> int:
+def tau(D: Annotated[F8, "N N"]) -> int:
     """Max number of nonzero entries in any row or column."""
     nz = np.asarray(D) > 0
     if nz.size == 0:
@@ -204,8 +206,9 @@ def nonzero_flows(c: Coflow, order_pos: int, *, largest_first: bool = True) -> l
 
 
 def extract_flows(
-    inst: Instance, pi: np.ndarray,
-) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    inst: Instance, pi: Annotated[I8, "M"],
+) -> tuple[Annotated[I8, "F"], Annotated[I8, "F"], Annotated[I8, "F"],
+           Annotated[I8, "F"], Annotated[F8, "F"]]:
     """All nonzero flows of an instance as flat arrays, in global pi order.
 
     Vectorized counterpart of calling :func:`nonzero_flows` per coflow along

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from typing import TYPE_CHECKING, Annotated, Sequence
 
 import numpy as np
 
@@ -40,10 +41,14 @@ from .assignment import (
     assign_tau_aware,
     assignment_from_choices,
 )
+from .arrays import F8, I8
 from .circuit_scheduler import ScheduledFlow
-from .coflow import Instance, OnlineInstance, extract_flows
+from .coflow import Coflow, Instance, OnlineInstance, extract_flows
 from .ordering import order_coflows, priority_scores
 from .scheduler import Schedule
+
+if TYPE_CHECKING:   # runtime import would cycle: fault.py imports engine
+    from .fault import FaultApplication, FaultEvent, FaultInjector
 
 __all__ = [
     "FlowTable",
@@ -88,12 +93,12 @@ _POLICY_OF = {
 class FlowTable:
     """All assigned flows of an instance as flat arrays, in global pi order."""
 
-    pos: np.ndarray   # (F,) int64 — coflow position in pi
-    cid: np.ndarray   # (F,) int64 — original coflow id
-    fi: np.ndarray    # (F,) int64 — ingress port
-    fj: np.ndarray    # (F,) int64 — egress port
-    core: np.ndarray  # (F,) int64 — assigned core
-    size: np.ndarray  # (F,) float64
+    pos: Annotated[I8, "F"]   # coflow position in pi
+    cid: Annotated[I8, "F"]   # original coflow id
+    fi: Annotated[I8, "F"]    # ingress port
+    fj: Annotated[I8, "F"]    # egress port
+    core: Annotated[I8, "F"]  # assigned core
+    size: Annotated[F8, "F"]
 
     @classmethod
     def from_assignment(cls, assignment: Assignment) -> "FlowTable":
@@ -142,12 +147,12 @@ def _pallas_choices(inst: Instance, flows: tuple[np.ndarray, ...]) -> np.ndarray
 
 def build_flow_table(
     inst: Instance,
-    pi: np.ndarray,
+    pi: Annotated[I8, "M"],
     algorithm: str = "ours",
     *,
     seed: int = 0,
     backend: str = "numpy",
-    delta_k: np.ndarray | None = None,
+    delta_k: Annotated[F8, "K"] | None = None,
 ) -> FlowTable:
     """Flat assignment front-end: demand tensors -> assigned ``FlowTable``.
 
@@ -177,13 +182,13 @@ def build_flow_table(
     policy, _ = _resolve_algorithm(algorithm, "")
     flows = extract_flows(inst, pi)
     if (policy == "tau-aware" and delta_k is not None
-            and bool(np.any(delta_k != inst.delta))):
+            and bool(np.any(delta_k != inst.delta))):  # reprolint: disable=float-eq -- identity check: delta_k entries are copied config/fault values, not arithmetic
         from .assignment import FlatAssignState
 
         st = FlatAssignState(policy, inst.rates, inst.delta, inst.N,
                              seed=seed)
         for k in range(inst.K):
-            if delta_k[k] != inst.delta:
+            if delta_k[k] != inst.delta:  # reprolint: disable=float-eq -- identity check: only overridden cores get a set_delta call
                 st.set_delta(k, float(delta_k[k]))
         _pos, _cid, fi, fj, sizes = flows
         core = st.assign(fi, fj, sizes)
@@ -320,10 +325,10 @@ def _event_loop(
                 # Only cores with a completion (or a release) at t can
                 # start flows now.
                 act = np.zeros(n_res // n_ports, dtype=bool)
-                act[np.nonzero(free_in == t)[0] // n_ports] = True
-                act[np.nonzero(free_out == t)[0] // n_ports] = True
+                act[np.nonzero(free_in == t)[0] // n_ports] = True  # reprolint: disable=float-eq -- exact-float convention: t was copied verbatim from free_in (circuit_scheduler docstring)
+                act[np.nonzero(free_out == t)[0] // n_ports] = True  # reprolint: disable=float-eq -- exact-float convention: t was copied verbatim from free_out
                 if release is not None:
-                    act[core[pending[release[pending] == t]]] = True
+                    act[core[pending[release[pending] == t]]] = True  # reprolint: disable=float-eq -- exact-float convention: event times are copied release values, never arithmetic
                 pend = pending[act[core[pending]]]
             if release is not None and pend.size:
                 pend = pend[release[pend] <= t]
@@ -377,8 +382,8 @@ def _event_loop(
         # Gather candidates from the flow lists of resources freed exactly
         # at t, plus flows released exactly at t (see the invariant in the
         # docstring).
-        pool = [in_lists[r] for r in np.nonzero(free_in == t)[0]]
-        pool += [out_lists[r] for r in np.nonzero(free_out == t)[0]]
+        pool = [in_lists[r] for r in np.nonzero(free_in == t)[0]]  # reprolint: disable=float-eq -- exact-float convention: t is popped verbatim from the event heap fed by free_in
+        pool += [out_lists[r] for r in np.nonzero(free_out == t)[0]]  # reprolint: disable=float-eq -- exact-float convention: t is popped verbatim from the event heap fed by free_out
         if release is not None:
             pool.append(rel_map.get(t, np.empty(0, np.int64)))
         cand = np.unique(np.concatenate(pool)) if pool else np.empty(0, np.int64)
@@ -434,7 +439,7 @@ def _sunflow_times(
     K: int,
     release: np.ndarray | None = None,
     prio: np.ndarray | None = None,
-    delta_k: np.ndarray | None = None,
+    delta_k: Annotated[F8, "K"] | None = None,
 ) -> np.ndarray:
     """SUNFLOW-CORE: per core, coflows strictly sequential (barrier), flows of
     one coflow scheduled largest-first.
@@ -464,7 +469,9 @@ def _sunflow_times(
             serve_order = None
             rel_of = {int(table.pos[f]): float(release[f]) for f in on_k}
             prio_of = {int(table.pos[f]): int(prio[f]) for f in on_k}
-            unserved = set(rel_of)
+            # insertion-ordered dict, not a set: the ready-list scan below
+            # must iterate in a deterministic order (reprolint RL104)
+            unserved = dict.fromkeys(rel_of)
         while True:
             if release is None:
                 if not serve_order:
@@ -478,7 +485,7 @@ def _sunflow_times(
                     barrier = min(rel_of[p] for p in unserved)
                     ready = [p for p in unserved if rel_of[p] <= barrier]
                 pos = min(ready, key=lambda p: prio_of[p])
-                unserved.remove(pos)
+                del unserved[pos]
             grp = on_k[table.pos[on_k] == pos]
             order = np.lexsort((table.fj[grp], table.fi[grp], -table.size[grp]))
             grp = grp[order]
@@ -496,8 +503,8 @@ def _times_for_table(
     pi: np.ndarray,
     table: FlowTable,
     scheduling: str = "work-conserving",
-    releases: np.ndarray | None = None,
-    delta_k: np.ndarray | None = None,
+    releases: Annotated[F8, "M"] | None = None,
+    delta_k: Annotated[F8, "K"] | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Scheduling phase over a flat ``FlowTable``: returns (t_est, srv).
 
@@ -615,11 +622,11 @@ def _schedule_from_times(
 
 def schedule_all_cores(
     inst: Instance,
-    pi: np.ndarray,
+    pi: Annotated[I8, "M"],
     assignment: Assignment,
     scheduling: str = "work-conserving",
     *,
-    releases: np.ndarray | None = None,
+    releases: Annotated[F8, "M"] | None = None,
 ) -> Schedule:
     """Schedule every assigned flow on all K cores in one vectorized call.
 
@@ -660,7 +667,7 @@ def run_fast(
     seed: int = 0,
     scheduling: str = "work-conserving",
     backend: str = "numpy",
-    delta_k: np.ndarray | None = None,
+    delta_k: Annotated[F8, "K"] | None = None,
 ) -> Schedule:
     """Batched-engine counterpart of ``scheduler.run`` (same semantics).
 
@@ -697,8 +704,8 @@ def run_fast_metrics(
     seed: int = 0,
     scheduling: str = "work-conserving",
     backend: str = "numpy",
-    releases: np.ndarray | None = None,
-    delta_k: np.ndarray | None = None,
+    releases: Annotated[F8, "M"] | None = None,
+    delta_k: Annotated[F8, "K"] | None = None,
 ) -> tuple[np.ndarray, int]:
     """Metrics-only fast path: per-coflow CCTs without object materialization.
 
@@ -733,7 +740,7 @@ def run_fast_online(
     seed: int = 0,
     scheduling: str = "work-conserving",
     backend: str = "numpy",
-    delta_k: np.ndarray | None = None,
+    delta_k: Annotated[F8, "K"] | None = None,
 ) -> Schedule:
     """Batched-engine counterpart of ``online.run_online`` (same semantics).
 
@@ -868,17 +875,17 @@ class TickCommit:
     """
 
     t_now: float
-    gid: np.ndarray          # (Fc,) int64
-    cid: np.ndarray          # (Fc,) int64
-    fi: np.ndarray           # (Fc,) int64
-    fj: np.ndarray           # (Fc,) int64
-    core: np.ndarray         # (Fc,) int64
-    size: np.ndarray         # (Fc,) float64
-    t_establish: np.ndarray  # (Fc,) float64
-    t_complete: np.ndarray   # (Fc,) float64
+    gid: Annotated[I8, "Fc"]
+    cid: Annotated[I8, "Fc"]
+    fi: Annotated[I8, "Fc"]
+    fj: Annotated[I8, "Fc"]
+    core: Annotated[I8, "Fc"]
+    size: Annotated[F8, "Fc"]
+    t_establish: Annotated[F8, "Fc"]
+    t_complete: Annotated[F8, "Fc"]
     finalized: tuple         # ((gid, cid, cct, weight), ...)
     n_pending: int           # flows still tentative after this tick
-    delta_f: np.ndarray | None = None  # (Fc,) float64 when delta drifted
+    delta_f: Annotated[F8, "Fc"] | None = None  # set after a DeltaDrift
     faults: tuple = ()       # (FaultApplication, ...) applied this tick
     unfinalized: tuple = ()  # gids whose final CCT was retracted this tick
 
@@ -905,17 +912,17 @@ class FabricState:
     def __init__(
         self,
         *,
-        rates,
+        rates: Annotated[F8, "K"],
         delta: float,
         N: int,
         algorithm: str = "ours",
         scheduling: str = "work-conserving",
         seed: int = 0,
-        faults=None,
+        faults: "FaultInjector | None" = None,
         track_commits: bool | None = None,
         delta_schedule: bool = True,
         fault_lookback: float = np.inf,
-    ):
+    ) -> None:
         policy, scheduling = _resolve_algorithm(algorithm, scheduling)
         if scheduling not in INCREMENTAL_SCHEDULINGS:
             raise ValueError(
@@ -1032,11 +1039,11 @@ class FabricState:
         c = self._commit
         return int(c["gid"].size) if c is not None else 0
 
-    def ccts(self) -> np.ndarray:
+    def ccts(self) -> Annotated[F8, "G"]:
         """Running per-coflow CCTs indexed by gid (final once finalized)."""
         return np.asarray(self._cct, dtype=np.float64)
 
-    def weights(self) -> np.ndarray:
+    def weights(self) -> Annotated[F8, "G"]:
         return np.asarray(self._weight, dtype=np.float64)
 
     # -- fault model --------------------------------------------------------
@@ -1093,7 +1100,7 @@ class FabricState:
             if wm > self._gc_floor:
                 self._gc_floor = wm
         c = self._commit
-        if c is None or not c["gid"].size or self._gc_floor == -np.inf:
+        if c is None or not c["gid"].size or self._gc_floor == -np.inf:  # reprolint: disable=float-eq -- -inf is an exact sentinel (never produced by arithmetic)
             return
         drop = c["t_comp"] <= self._gc_floor
         n_drop = int(drop.sum())
@@ -1128,7 +1135,7 @@ class FabricState:
             for name, _dt in _PEND_FIELDS
         }
 
-    def apply_fault(self, event):
+    def apply_fault(self, event: "FaultEvent") -> "FaultApplication":
         """Apply one topology-churn event (see ``core.fault``) right now.
 
         Committed circuits interrupted by the event are aborted (their
@@ -1162,7 +1169,9 @@ class FabricState:
         # full — exactly what correctness after churn requires).
         self._tent = None
 
-        def _done(aborted=(), requeued=0, reassigned=0, unfinalized=()):
+        def _done(aborted: Sequence = (), requeued: int = 0,
+                  reassigned: int = 0,
+                  unfinalized: Sequence = ()) -> "FaultApplication":
             app = FaultApplication(
                 event=event, aborted=tuple(aborted), requeued=int(requeued),
                 reassigned_pending=int(reassigned),
@@ -1274,7 +1283,8 @@ class FabricState:
                      reassigned=int(strand.sum()), unfinalized=unfinalized)
 
     # -- admission + scheduling -------------------------------------------
-    def _admit(self, coflows, releases: np.ndarray) -> dict:
+    def _admit(self, coflows: Sequence[Coflow],
+               releases: np.ndarray) -> dict:
         """Register a batch and return its pending-flow arrays in
         within-batch arrival order (release, then WSPT score desc, then
         submission order) — the global arrival order's restriction to the
@@ -1324,7 +1334,8 @@ class FabricState:
             "intra": intra,
         }
 
-    def step(self, coflows, releases, t_now: float) -> TickCommit:
+    def step(self, coflows: Sequence[Coflow],
+             releases: Annotated[F8, "B"], t_now: float) -> TickCommit:
         """One service tick: admit ``coflows`` (released in
         ``(previous tick, t_now]``), schedule all pending flows against the
         committed horizons, and commit every circuit establishing at or
@@ -1496,7 +1507,7 @@ def cross_check_incremental(
     seed: int = 0,
     scheduling: str = "work-conserving",
     n_ticks: int = 8,
-    tick_times: np.ndarray | None = None,
+    tick_times: Annotated[F8, "T"] | None = None,
     compare_delta: bool = True,
 ) -> list[TickCommit]:
     """Differential gate for the incremental path: FabricState vs full replay.

@@ -70,6 +70,7 @@ all, tick by tick — fuzzed in ``tests/test_fault_differential.py``.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 __all__ = [
     "CoreDown",
@@ -176,7 +177,7 @@ class FaultInjector:
     The injector is a one-pass cursor: each event fires exactly once.
     """
 
-    def __init__(self, events=()):
+    def __init__(self, events: Sequence["FaultEvent"] = ()) -> None:
         events = tuple(events)
         for ev in events:
             if not isinstance(ev, FAULT_EVENTS):

@@ -193,7 +193,9 @@ def _sunflow_core_online(
     groups: dict[int, list] = {}
     for af in flows:
         groups.setdefault(af.flow.coflow, []).append(af)
-    unserved = set(groups)
+    # insertion-ordered dict, not a set: the ready-list scan must iterate
+    # deterministically (reprolint RL104)
+    unserved = dict.fromkeys(groups)
     out: list[ScheduledFlow] = []
     barrier = 0.0
     while unserved:
@@ -202,7 +204,7 @@ def _sunflow_core_online(
             barrier = min(float(rel_pos[p]) for p in unserved)
             ready = [p for p in unserved if rel_pos[p] <= barrier]
         pos = min(ready, key=lambda p: prio_pos[p])
-        unserved.remove(pos)
+        del unserved[pos]
         grp = sorted(groups[pos], key=lambda af: (-af.flow.size, af.flow.i,
                                                   af.flow.j))
         fi = np.array([af.flow.i for af in grp], dtype=np.int64)

@@ -37,7 +37,8 @@ def _first_bad(mask: np.ndarray) -> int:
     return int(np.argmax(mask))
 
 
-def _check_exclusivity(core, port, t_est, t_comp, n_ports: int,
+def _check_exclusivity(core: np.ndarray, port: np.ndarray,
+                       t_est: np.ndarray, t_comp: np.ndarray, n_ports: int,
                        axis: str) -> None:
     """Sort-based interval overlap over merged (core, port) resources.
 

@@ -29,7 +29,7 @@ def gamma_w(weights: np.ndarray) -> float:
     return float(len(w) * (w**2).sum() / (w.sum() ** 2))
 
 
-def _require_assignment(s: Schedule):
+def _require_assignment(s: Schedule) -> None:
     """Lemmas 2/3 charge prefix traffic per core, which needs the per-coflow
     AssignedFlow lists. The flat engine path (``engine.run_fast``) does not
     materialize them — fail with directions rather than an AttributeError."""

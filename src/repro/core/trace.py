@@ -19,9 +19,11 @@ coflows are sampled.
 from __future__ import annotations
 
 import dataclasses
+from typing import Annotated, Any, Iterator
 
 import numpy as np
 
+from .arrays import F8
 from .coflow import Coflow, Instance, OnlineInstance
 
 __all__ = ["TraceCoflow", "synth_fb_trace", "load_fb_trace",
@@ -120,14 +122,14 @@ def sample_instance(
     *,
     N: int,
     M: int,
-    rates,
+    rates: Annotated[F8, "K"],
     delta: float,
     seed: int = 0,
     weight_mode: str = "uniform-int",
     weight_params: tuple = (1, 10),
     machine_map: str = "restrict",
     return_pick: bool = False,
-):
+) -> "Instance | tuple[Instance, np.ndarray]":
     """Build an N-port, M-coflow instance per the paper's Section V-A.
 
     ``machine_map="restrict"`` (paper-faithful reading): N machines are
@@ -204,11 +206,11 @@ def sample_online_instance(
     *,
     N: int,
     M: int,
-    rates,
+    rates: Annotated[F8, "K"],
     delta: float,
     span: float,
     seed: int = 0,
-    **kw,
+    **kw: Any,
 ) -> OnlineInstance:
     """Sample an instance WITH release times taken from the trace's arrival
     stamps — the streaming workload the fabric-manager service consumes.
@@ -228,12 +230,12 @@ def sample_online_instance(
         return OnlineInstance(inst=inst, releases=np.zeros(0))
     arr = np.array([trace[int(t)].arrival_ms for t in pick])
     lo, hi = float(arr.min()), float(arr.max())
-    rel = (np.zeros(M) if span == 0 or hi == lo
+    rel = (np.zeros(M) if span == 0 or hi == lo  # reprolint: disable=float-eq -- degenerate-span guard: exact equality is the division-by-zero condition
            else (arr - lo) / (hi - lo) * span)
     return OnlineInstance(inst=inst, releases=rel)
 
 
-def arrival_stream(oinst: OnlineInstance):
+def arrival_stream(oinst: OnlineInstance) -> Iterator[tuple[Coflow, float]]:
     """Yield ``(coflow, release)`` in arrival order — the event stream a
     fabric manager's admission queue sees (``service.FabricManager.submit``
     consumes exactly these pairs)."""

@@ -98,7 +98,7 @@ class AdmissionPolicy:
     resume_depth: int | None = None
     max_standby: int | None = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         for name in ("max_pending_flows", "shed_depth", "resume_depth",
                      "max_standby"):
             v = getattr(self, name)
@@ -134,7 +134,7 @@ class AdmissionQueue:
     """Bounded FIFO of arrival requests with micro-batch draining."""
 
     def __init__(self, max_depth: int = 1024,
-                 policy: AdmissionPolicy | None = None):
+                 policy: AdmissionPolicy | None = None) -> None:
         if max_depth < 1:
             raise ValueError("max_depth must be >= 1")
         self.max_depth = int(max_depth)

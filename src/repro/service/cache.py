@@ -15,9 +15,11 @@ from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
+from typing import Annotated, Callable
 
 import numpy as np
 
+from repro.core.arrays import F8
 from repro.core.coflow import Instance
 
 __all__ = ["instance_key", "ProgramCache"]
@@ -25,7 +27,7 @@ __all__ = ["instance_key", "ProgramCache"]
 
 def instance_key(
     inst: Instance,
-    releases: np.ndarray | None = None,
+    releases: Annotated[F8, "M"] | None = None,
     *,
     algorithm: str = "ours",
     scheduling: str = "work-conserving",
@@ -71,7 +73,7 @@ class ProgramCache:
     ``(program, submitted cid order)`` so hits can be re-labeled to the
     caller's coflow ids)."""
 
-    def __init__(self, capacity: int = 128):
+    def __init__(self, capacity: int = 128) -> None:
         if capacity < 1:
             raise ValueError("cache capacity must be >= 1")
         self.capacity = int(capacity)
@@ -82,7 +84,7 @@ class ProgramCache:
     def __len__(self) -> int:
         return len(self._store)
 
-    def get(self, key: str):
+    def get(self, key: str) -> object | None:
         """Program for ``key``, or None (counts a hit/miss either way)."""
         try:
             val = self._store[key]
@@ -93,13 +95,13 @@ class ProgramCache:
         self.hits += 1
         return val
 
-    def put(self, key: str, program) -> None:
+    def put(self, key: str, program: object) -> None:
         self._store[key] = program
         self._store.move_to_end(key)
         while len(self._store) > self.capacity:
             self._store.popitem(last=False)
 
-    def invalidate(self, pred) -> int:
+    def invalidate(self, pred: Callable[[object], bool]) -> int:
         """Drop every entry whose value satisfies ``pred``; returns the
         count. The fault path uses this to purge programs that matched
         circuits through a core that just failed — they must never be

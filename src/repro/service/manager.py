@@ -28,9 +28,11 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
+from typing import TYPE_CHECKING, Annotated, Sequence
 
 import numpy as np
 
+from repro.core.arrays import F8
 from repro.core.batch import ResultTable, run_batch
 from repro.core.coflow import Coflow, Instance, OnlineInstance
 from repro.core.engine import (
@@ -47,6 +49,9 @@ from .admission import (
     BackpressureError,
 )
 from .cache import ProgramCache, instance_key
+if TYPE_CHECKING:
+    from repro.core.fault import FaultApplication, FaultEvent
+
 from .program import (
     CircuitEvent,
     CircuitProgram,
@@ -137,7 +142,7 @@ class FaultReport:
 class FabricManager:
     """Streaming coflow admission -> incremental scheduling -> programs."""
 
-    def __init__(self, config: FabricConfig = FabricConfig()):
+    def __init__(self, config: FabricConfig = FabricConfig()) -> None:
         if config.scheduling not in INCREMENTAL_SCHEDULINGS:
             raise ValueError(
                 f"service scheduling must be incremental "
@@ -281,7 +286,7 @@ class FabricManager:
         return self._tick(np.inf, capped=False)
 
     # -- fault plane --------------------------------------------------------
-    def _register_fault(self, app) -> FaultReport:
+    def _register_fault(self, app: "FaultApplication") -> FaultReport:
         """Turn one ``FaultApplication`` into its corrective actions: emit
         teardown events for every aborted circuit, retract retracted final
         CCTs from the counters, and purge one-shot cache entries that
@@ -306,7 +311,7 @@ class FabricManager:
         self.fault_reports.append(report)
         return report
 
-    def report_fault(self, event) -> FaultReport:
+    def report_fault(self, event: "FaultEvent") -> FaultReport:
         """Apply one topology-churn event (``core.fault``) right now.
 
         The event is applied to the incremental state immediately — commits
@@ -330,7 +335,7 @@ class FabricManager:
                                 self.state.N)
         return merged.drop(self.state.aborted_keys())
 
-    def ccts(self) -> np.ndarray:
+    def ccts(self) -> Annotated[F8, "G"]:
         """Per-coflow CCTs by admission id (final for finalized coflows)."""
         return self.state.ccts()
 
@@ -432,8 +437,9 @@ class FabricManager:
             self.cache.put(key, canonical)
         return program, hit
 
-    def sweep_instances(self, instances, algorithms=("ours",),
-                        **kw) -> ResultTable:
+    def sweep_instances(self, instances: Sequence[Instance],
+                        algorithms: Sequence[str] = ("ours",),
+                        **kw: object) -> ResultTable:
         """Grid dispatch to ``core.run_batch`` (validator-gated sweeps)."""
         return run_batch(instances, algorithms, **kw)
 
@@ -473,6 +479,11 @@ class FabricManager:
             # delta-scheduling effectiveness + retention GC
             "tent_reused": self.state.tent_reused,
             "tent_recomputed": self.state.tent_recomputed,
+            "tent_reuse_fraction": (
+                self.state.tent_reused
+                / (self.state.tent_reused + self.state.tent_recomputed)
+                if (self.state.tent_reused
+                    + self.state.tent_recomputed) else 0.0),
             "commits_retained": self.state.n_commits_retained,
             "commits_gced": self.state.commits_gced,
             "cache_hits": self.cache.hits,

@@ -17,13 +17,17 @@ concatenate (:meth:`merge`) into the stream-wide program.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import TYPE_CHECKING, Annotated, Iterator, Sequence
 
 import numpy as np
 
+from repro.core.arrays import F8, I8
 from repro.core.circuit_scheduler import ScheduledFlow
 from repro.core.coflow import Coflow, Instance
 from repro.core.scheduler import Schedule
+
+if TYPE_CHECKING:
+    from repro.core.engine import TickCommit
 
 __all__ = ["CircuitEvent", "CircuitProgram", "compile_commit",
            "compile_schedule", "merge_programs"]
@@ -55,23 +59,24 @@ class CircuitProgram:
     ``t_complete``.
     """
 
-    rates: np.ndarray        # (K,) float64
+    rates: Annotated[F8, "K"]
     delta: float
     N: int
-    core: np.ndarray         # (S,) int64
-    ingress: np.ndarray      # (S,) int64
-    egress: np.ndarray       # (S,) int64
-    cid: np.ndarray          # (S,) int64 — served coflow id
-    size: np.ndarray         # (S,) float64 — bytes carried
-    t_establish: np.ndarray  # (S,) float64
-    t_complete: np.ndarray   # (S,) float64
+    core: Annotated[I8, "S"]
+    ingress: Annotated[I8, "S"]
+    egress: Annotated[I8, "S"]
+    cid: Annotated[I8, "S"]      # served coflow id
+    size: Annotated[F8, "S"]     # bytes carried
+    t_establish: Annotated[F8, "S"]
+    t_complete: Annotated[F8, "S"]
     #: per-segment reconfiguration delay in force at establishment (fault
     #: model: ``core.fault.DeltaDrift`` gives cores individual delays);
     #: ``None`` means the uniform nominal ``delta``.
-    delta_seg: np.ndarray | None = None
+    delta_seg: Annotated[F8, "S"] | None = None
 
     @classmethod
-    def empty(cls, rates, delta: float, N: int) -> "CircuitProgram":
+    def empty(cls, rates: Annotated[F8, "K"], delta: float,
+              N: int) -> "CircuitProgram":
         return cls(rates=np.asarray(rates, dtype=np.float64),
                    delta=float(delta), N=int(N), core=_EMPTY_I.copy(),
                    ingress=_EMPTY_I.copy(), egress=_EMPTY_I.copy(),
@@ -105,11 +110,11 @@ class CircuitProgram:
                 ingress=int(self.ingress[s]), egress=int(self.egress[s]),
                 cid=int(self.cid[s]))
 
-    def per_core(self) -> dict[int, np.ndarray]:
+    def per_core(self) -> dict[int, Annotated[I8, "*"]]:
         """Segment indices per core (already time-ordered within a core)."""
         return {k: np.nonzero(self.core == k)[0] for k in range(self.K)}
 
-    def seg_delta(self) -> np.ndarray:
+    def seg_delta(self) -> Annotated[F8, "S"]:
         """Per-segment reconfiguration delay, materialized."""
         if self.delta_seg is not None:
             return self.delta_seg
@@ -190,14 +195,16 @@ class CircuitProgram:
         validate(self.as_schedule(), flow_delta=self.delta_seg)
 
 
-def merge_programs(programs, rates, delta: float, N: int) -> CircuitProgram:
+def merge_programs(programs: Sequence[CircuitProgram],
+                   rates: Annotated[F8, "K"], delta: float,
+                   N: int) -> CircuitProgram:
     """Concatenate any number of programs for one fabric (re-sorted)."""
     programs = list(programs)
     if not programs:
         return CircuitProgram.empty(rates, delta, N)
     rates = np.asarray(rates, dtype=np.float64)
     for p in programs:
-        if (p.N != int(N) or p.delta != float(delta)
+        if (p.N != int(N) or p.delta != float(delta)  # reprolint: disable=float-eq -- fabric-identity check: programs merge only for bit-identical delta (cache keys hash the exact value)
                 or not np.array_equal(p.rates, rates)):
             raise ValueError("cannot merge programs for different fabrics")
     cat = lambda attr: np.concatenate([getattr(p, attr) for p in programs])
@@ -210,8 +217,11 @@ def merge_programs(programs, rates, delta: float, N: int) -> CircuitProgram:
                            cat("t_establish"), cat("t_complete"), dseg)
 
 
-def _sorted_program(rates, delta, N, core, ingress, egress, cid, size,
-                    t_est, t_comp, delta_seg=None) -> CircuitProgram:
+def _sorted_program(rates: np.ndarray, delta: float, N: int,
+                    core: np.ndarray, ingress: np.ndarray,
+                    egress: np.ndarray, cid: np.ndarray, size: np.ndarray,
+                    t_est: np.ndarray, t_comp: np.ndarray,
+                    delta_seg: np.ndarray | None = None) -> CircuitProgram:
     order = np.lexsort((ingress, t_est, core))
     return CircuitProgram(
         rates=np.asarray(rates, dtype=np.float64), delta=float(delta),
@@ -221,7 +231,8 @@ def _sorted_program(rates, delta, N, core, ingress, egress, cid, size,
         delta_seg=None if delta_seg is None else delta_seg[order])
 
 
-def compile_commit(commit, rates, delta: float, N: int) -> CircuitProgram:
+def compile_commit(commit: "TickCommit", rates: Annotated[F8, "K"],
+                   delta: float, N: int) -> CircuitProgram:
     """Compile one ``engine.TickCommit`` into its circuit program.
 
     The program's ``cid`` field carries the stream admission id

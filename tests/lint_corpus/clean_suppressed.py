@@ -1,0 +1,6 @@
+"""A justified suppression silences the finding (and is counted)."""
+# reprolint: pretend-path=src/repro/core/fake_clean.py
+import numpy as np
+
+free = np.zeros(8)
+hit = bool((free == 0.0).any())  # reprolint: disable=float-eq -- corpus exemplar: exact sentinel compare, values copied verbatim

@@ -1,0 +1,7 @@
+"""RL001: suppressions must carry a justification and name real rules."""
+# reprolint: pretend-path=src/repro/core/fake_bad_suppression.py
+import numpy as np
+
+x = np.zeros(3)
+flag = bool((x == 0.5).any())  # reprolint: disable=float-eq
+flag2 = bool((x == 0.5).any())  # reprolint: disable=no-such-rule -- not a rule

@@ -1,0 +1,8 @@
+"""RL101: module-level numpy / stdlib global RNG is forbidden everywhere."""
+import random
+
+import numpy as np
+
+noise = np.random.rand(4)
+np.random.seed(0)
+pick = random.random()

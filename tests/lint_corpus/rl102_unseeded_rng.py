@@ -1,0 +1,8 @@
+"""RL102: RNG constructors without an explicit seed are nondeterministic."""
+import random
+
+import numpy as np
+
+rng = np.random.default_rng()
+r2 = random.Random()
+ok = np.random.default_rng(1234)   # seeded: not a finding

@@ -1,0 +1,11 @@
+"""RL103: wall-clock reads inside scheduling code (core/service/kernels)."""
+# reprolint: pretend-path=src/repro/core/fake_clock.py
+import time
+from datetime import datetime
+
+
+def deadline() -> float:
+    now = time.time()
+    stamp = datetime.now()
+    ok = time.perf_counter()   # telemetry clock: not a finding
+    return now + ok + stamp.timestamp()

@@ -1,0 +1,14 @@
+"""RL104: iterating a set feeds order-sensitive accumulation."""
+# reprolint: pretend-path=src/repro/core/fake_sets.py
+
+
+def accumulate(items: list) -> float:
+    pending = set(items)
+    total = 0.0
+    for p in pending:
+        total += p
+    picks = [q for q in pending if q > 0]
+    total += sum(pending)
+    for p in sorted(pending):   # sorted copy: not a finding
+        total += p
+    return total + len(picks)

@@ -1,0 +1,11 @@
+"""RL105: raw float equality outside the blessed exact-float modules."""
+# reprolint: pretend-path=src/repro/core/fake_float.py
+import numpy as np
+
+
+def check(t: float, free: np.ndarray) -> bool:
+    free = np.zeros(4)
+    hit = bool((free == t).any())
+    done = t != 0.25
+    close = abs(t - 0.25) <= 1e-9   # tolerance compare: not a finding
+    return hit and done and close

@@ -1,0 +1,18 @@
+"""RL106: mutating committed FlowTable/FlatAssignState arrays elsewhere."""
+# reprolint: pretend-path=src/repro/distributed/fake_mutator.py
+import numpy as np
+
+from repro.core.assignment import FlatAssignState
+from repro.core.engine import FlowTable, build_flow_table
+
+
+def tamper(table: FlowTable, st: FlatAssignState) -> None:
+    table.size[0] = 0.0
+    table.pos = np.zeros(1, dtype=np.int64)
+    table.core.fill(0)
+    np.add.at(table.size, 0, 1.0)
+
+
+def tamper_built(inst, pi) -> None:
+    t = build_flow_table(inst, pi)
+    t.size[:] = 1.0

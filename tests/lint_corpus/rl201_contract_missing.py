@@ -1,0 +1,31 @@
+"""RL201: contract modules must annotate public signatures with specs."""
+# reprolint: pretend-path=src/repro/service/fake_contract.py
+from typing import Annotated
+
+import numpy as np
+
+from repro.core.arrays import F8
+
+
+def missing_param(releases, t_now: float) -> float:
+    return float(releases.min()) + t_now
+
+
+def bare_array(sizes: np.ndarray) -> None:
+    sizes.sum()
+
+
+def bad_spec(sizes: Annotated[F8, "F!"]) -> None:
+    sizes.sum()
+
+
+def missing_return(t_now: float):
+    return None
+
+
+def fine(sizes: Annotated[F8, "F"], t_now: float) -> float:
+    return float(sizes.sum()) + t_now
+
+
+def _private(untyped):   # private: not a finding
+    return untyped

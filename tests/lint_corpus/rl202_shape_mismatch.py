@@ -1,0 +1,21 @@
+"""RL202: call-site rank / shape-variable consistency."""
+# reprolint: pretend-path=src/repro/service/fake_shapes.py
+from typing import Annotated
+
+from repro.core.arrays import F8
+
+
+def consume(demand: Annotated[F8, "K N"], loads: Annotated[F8, "K"]) -> None:
+    pass
+
+
+def pair(a: Annotated[F8, "F"], b: Annotated[F8, "F"]) -> None:
+    pass
+
+
+def caller(flat: Annotated[F8, "F"], rates: Annotated[F8, "K"],
+           sizes: Annotated[F8, "M"]) -> None:
+    consume(flat, rates)
+    pair(rates, sizes)
+    pair(rates, rates)   # consistent binding: not a finding
+    consume(demand=flat, loads=rates)

@@ -1,0 +1,17 @@
+"""RL203: no fp64 / host numpy inside Pallas kernel bodies."""
+# reprolint: pretend-path=src/repro/kernels/fake_kernel.py
+import jax.numpy as jnp
+import numpy as np
+
+BIG = jnp.float32(3.4e38)
+
+
+def _fake_kernel(x_ref, o_ref):
+    acc = x_ref[...].astype(jnp.float64)
+    host = np.maximum(acc, 0)
+    wide = jnp.zeros((4,), dtype=jnp.float64)
+    o_ref[...] = (acc + host + wide).astype(jnp.float32)
+
+
+def host_helper(x):   # no *_ref params: not a kernel body, not a finding
+    return np.asarray(x, dtype=np.float64)

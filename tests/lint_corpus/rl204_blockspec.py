@@ -1,0 +1,27 @@
+"""RL204: literal BlockSpec tiles must be positive and divide out_shape."""
+# reprolint: pretend-path=src/repro/kernels/fake_blockspec.py
+import jax
+from jax.experimental import pallas as pl
+
+
+def bad_tile(kernel):
+    return pl.pallas_call(
+        kernel,
+        grid=(2,),
+        out_shape=jax.ShapeDtypeStruct((100,), "float32"),
+        out_specs=pl.BlockSpec((64,), lambda i: (i,)),
+    )
+
+
+def bad_extent(kernel):
+    spec = pl.BlockSpec((0, 128), lambda i: (i, 0))
+    return spec
+
+
+def fine(kernel):
+    return pl.pallas_call(
+        kernel,
+        grid=(2,),
+        out_shape=jax.ShapeDtypeStruct((128,), "float32"),
+        out_specs=pl.BlockSpec((64,), lambda i: (i,)),
+    )

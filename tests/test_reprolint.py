@@ -1,0 +1,155 @@
+"""reprolint self-tests: golden corpus exactness + repo-wide cleanliness.
+
+Every rule has one minimal offender in ``tests/lint_corpus/``; each test
+asserts the rule fires at exactly the expected (line, rule) pairs — and
+nowhere else in that file — so a checker regression (rule gone silent, or
+spraying false positives) fails loudly. The repo-tree test is the same
+gate CI runs: ``python -m repro.analysis.lint src/ tests/ benchmarks/``
+must be clean.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import DEFAULT_EXCLUDES, lint_paths
+from repro.analysis.lint.common import RULES
+
+REPO = Path(__file__).resolve().parent.parent
+CORPUS = Path(__file__).resolve().parent / "lint_corpus"
+
+
+def corpus_findings(name: str):
+    report = lint_paths([CORPUS / name], root=REPO)
+    return report
+
+
+def pairs(report):
+    return sorted((f.line, f.rule) for f in report.findings)
+
+
+# ---------------------------------------------------------- per-rule corpus
+
+CORPUS_EXPECT = {
+    "rl001_bad_suppression.py": [
+        (6, "bad-suppression"), (6, "float-eq"),
+        (7, "bad-suppression"), (7, "float-eq"),
+    ],
+    "rl101_global_rng.py": [
+        (6, "global-rng"), (7, "global-rng"), (8, "global-rng"),
+    ],
+    "rl102_unseeded_rng.py": [
+        (6, "unseeded-rng"), (7, "unseeded-rng"),
+    ],
+    "rl103_wall_clock.py": [
+        (8, "wall-clock"), (9, "wall-clock"),
+    ],
+    "rl104_set_iteration.py": [
+        (8, "unordered-iteration"), (10, "unordered-iteration"),
+        (11, "unordered-iteration"),
+    ],
+    "rl105_float_eq.py": [
+        (8, "float-eq"), (9, "float-eq"),
+    ],
+    "rl106_commit_mutation.py": [
+        (10, "commit-mutation"), (11, "commit-mutation"),
+        (12, "commit-mutation"), (13, "commit-mutation"),
+        (18, "commit-mutation"),
+    ],
+    "rl201_contract_missing.py": [
+        (10, "contract-missing"), (14, "contract-missing"),
+        (18, "contract-missing"), (22, "contract-missing"),
+    ],
+    "rl202_shape_mismatch.py": [
+        (18, "shape-mismatch"), (19, "shape-mismatch"),
+        (21, "shape-mismatch"),
+    ],
+    "rl203_kernel_fp64.py": [
+        (10, "kernel-fp64"), (11, "kernel-fp64"), (12, "kernel-fp64"),
+    ],
+    "rl204_blockspec.py": [
+        (8, "blockspec-shape"), (17, "blockspec-shape"),
+    ],
+}
+
+
+@pytest.mark.parametrize("name", sorted(CORPUS_EXPECT))
+def test_corpus_rule_fires_exactly(name):
+    report = corpus_findings(name)
+    assert pairs(report) == sorted(CORPUS_EXPECT[name]), (
+        f"{name}: expected {sorted(CORPUS_EXPECT[name])}, "
+        f"got {pairs(report)}")
+    assert not report.ok
+
+
+def test_every_checker_rule_has_a_corpus_offender():
+    covered = {rule for expect in CORPUS_EXPECT.values()
+               for _, rule in expect}
+    # parse-error is the loader's own rule; everything else must be
+    # exercised by the golden corpus.
+    assert covered == set(RULES) - {"parse-error"}
+
+
+def test_justified_suppression_silences_and_is_counted():
+    report = corpus_findings("clean_suppressed.py")
+    assert report.ok
+    assert len(report.suppressed) == 1
+    assert report.suppressed[0].rule == "float-eq"
+
+
+def test_suppression_without_justification_is_rejected():
+    report = corpus_findings("rl001_bad_suppression.py")
+    # the invalid disables are themselves findings AND do not suppress
+    assert (6, "bad-suppression") in pairs(report)
+    assert (6, "float-eq") in pairs(report)
+
+
+def test_corpus_dir_excluded_from_walks_but_explicit_files_lint():
+    assert "lint_corpus" in DEFAULT_EXCLUDES
+    walked = lint_paths([CORPUS.parent], root=REPO)
+    corpus_paths = {str(CORPUS / n) for n in CORPUS_EXPECT}
+    assert not corpus_paths & {f.path for f in walked.findings}
+
+
+# ------------------------------------------------------------ repo-wide gate
+
+def test_repo_tree_lints_clean():
+    report = lint_paths([REPO / "src", REPO / "tests", REPO / "benchmarks"],
+                        root=REPO)
+    assert report.ok, "\n".join(f.render() for f in report.findings)
+    # suppressions are justified, deliberate, and bounded: growth here must
+    # be a conscious reviewed choice, not drift
+    assert len(report.suppressed) <= 25
+
+
+# -------------------------------------------------------------- CLI contract
+
+def _run_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    out = tmp_path / "report.json"
+    ok = _run_cli("--json", str(out), str(REPO / "src"))
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    payload = json.loads(out.read_text())
+    assert payload["ok"] is True
+    assert payload["finding_count"] == 0
+    assert payload["suppression_count"] >= 1
+    assert payload["files"] > 0
+
+    bad = _run_cli("--json", str(out),
+                   str(CORPUS / "rl101_global_rng.py"))
+    assert bad.returncode == 1
+    payload = json.loads(out.read_text())
+    assert payload["ok"] is False
+    assert payload["by_rule"] == {"global-rng": 3}
+    assert all(set(f) >= {"rule", "code", "path", "line", "message"}
+               for f in payload["findings"])

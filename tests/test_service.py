@@ -206,6 +206,27 @@ def test_manager_stream_matches_replay_and_programs_validate():
     assert s["decision_latency_p99_s"] >= s["decision_latency_p50_s"] >= 0
 
 
+def test_summary_exports_tent_reuse_telemetry():
+    """Delta-scheduling effectiveness is observable at the service boundary:
+    summary() surfaces the engine's tent_reused/tent_recomputed counters and
+    their fraction (0.0, not a division blow-up, on an idle manager)."""
+    empty = FabricManager(FabricConfig(rates=RATES, delta=8.0, N=12))
+    s0 = empty.summary()
+    assert s0["tent_reused"] == 0 and s0["tent_recomputed"] == 0
+    assert s0["tent_reuse_fraction"] == 0.0
+
+    oinst = _stream(seed=8, span_factor=1.0)
+    mgr = FabricManager(FabricConfig(rates=RATES, delta=8.0, N=12))
+    _drive(mgr, oinst, n_ticks=6)
+    s = mgr.summary()
+    assert s["tent_reused"] == mgr.state.tent_reused
+    assert s["tent_recomputed"] == mgr.state.tent_recomputed
+    total = s["tent_reused"] + s["tent_recomputed"]
+    assert total > 0
+    assert s["tent_reuse_fraction"] == pytest.approx(s["tent_reused"] / total)
+    assert 0.0 <= s["tent_reuse_fraction"] <= 1.0
+
+
 def test_program_round_trip_through_validate():
     """A program rebuilt as a Schedule satisfies the independent referee,
     and a tampered program does not."""
