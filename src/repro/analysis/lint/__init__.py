@@ -25,9 +25,10 @@ import json
 from pathlib import Path
 from typing import Iterable, Iterator
 
-from .common import Finding, Module, RULES, load_module
+from .common import Finding, FuncSpec, Module, RULES, load_module
 from .contracts import build_registry, check_contracts
 from .determinism import check_determinism
+from .protocol import check_protocol
 
 __all__ = ["LintReport", "lint_paths", "lint_files", "RULES"]
 
@@ -44,6 +45,8 @@ class LintReport:
     findings: list[Finding]            # unsuppressed: these gate CI
     suppressed: list[Finding]          # matched by a justified suppression
     files: int
+    #: call-graph/effect statistics from the RL30x protocol pass
+    protocol: dict[str, object] = dataclasses.field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -55,13 +58,14 @@ class LintReport:
             out[f.rule] = out.get(f.rule, 0) + 1
         return out
 
-    def to_dict(self) -> dict:
+    def to_dict(self) -> dict[str, object]:
         return {
             "ok": self.ok,
             "files": self.files,
             "finding_count": len(self.findings),
             "suppression_count": len(self.suppressed),
             "by_rule": self.by_rule(),
+            "protocol": self.protocol,
             "findings": [f.to_dict() for f in self.findings],
             "suppressed": [f.to_dict() for f in self.suppressed],
         }
@@ -88,7 +92,8 @@ def _collect(paths: Iterable[str | Path]) -> list[Path]:
     return out
 
 
-def _lint_module(mod: Module, registry) -> Iterator[Finding]:
+def _lint_module(mod: Module,
+                 registry: dict[str, dict[str, FuncSpec]]) -> Iterator[Finding]:
     yield from check_determinism(mod)
     yield from check_contracts(mod, registry)
 
@@ -129,17 +134,26 @@ def lint_files(files: Iterable[Path], root: Path | None = None) -> LintReport:
 
     kept: list[Finding] = list(findings)
     suppressed: list[Finding] = []
+
+    def _route(mod: Module, f: Finding) -> None:
+        sup = mod.suppressions.get(f.line)
+        if sup is not None and sup.covers(f.rule):
+            suppressed.append(f)
+        else:
+            kept.append(f)
+
     for mod in modules:
         kept.extend(_bad_suppressions(mod))
         for f in _lint_module(mod, registry):
-            sup = mod.suppressions.get(f.line)
-            if sup is not None and sup.covers(f.rule):
-                suppressed.append(f)
-            else:
-                kept.append(f)
+            _route(mod, f)
+    proto_findings, protocol = check_protocol(modules)
+    by_path = {str(mod.path): mod for mod in modules}
+    for f in proto_findings:
+        _route(by_path[f.path], f)
     kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     suppressed.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
-    return LintReport(findings=kept, suppressed=suppressed, files=n_files)
+    return LintReport(findings=kept, suppressed=suppressed, files=n_files,
+                      protocol=protocol)
 
 
 def lint_paths(paths: Iterable[str | Path],

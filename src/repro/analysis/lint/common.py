@@ -34,6 +34,11 @@ RULES: dict[str, str] = {
     "shape-mismatch": "RL202",
     "kernel-fp64": "RL203",
     "blockspec-shape": "RL204",
+    "cache-coherence": "RL301",
+    "commit-finality": "RL302",
+    "rng-discipline": "RL303",
+    "watermark-source": "RL304",
+    "effect-mismatch": "RL305",
 }
 RULE_CODES: dict[str, str] = {code: name for name, code in RULES.items()}
 
@@ -57,7 +62,7 @@ class Finding:
     def code(self) -> str:
         return RULES[self.rule]
 
-    def to_dict(self) -> dict:
+    def to_dict(self) -> dict[str, object]:
         return {"rule": self.rule, "code": self.code, "path": self.path,
                 "line": self.line, "col": self.col, "message": self.message}
 
@@ -313,8 +318,8 @@ def parse_annotation(node: ast.AST | None) -> AnnInfo:
     return AnnInfo(kind="other")
 
 
-def load_module(path: Path, root: Path | None = None) -> Module | None:
-    """Load + parse one file; returns None when unreadable (caller reports).
+def load_module(path: Path, root: Path | None = None) -> Module:
+    """Load + parse one file; raises OSError/SyntaxError (caller reports).
 
     Honors a ``# reprolint: pretend-path=...`` directive so the golden
     corpus under ``tests/lint_corpus/`` can exercise path-scoped rules.

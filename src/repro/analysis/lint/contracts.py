@@ -85,7 +85,7 @@ def _is_public(name: str) -> bool:
 
 
 def _decorator_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
-    out = set()
+    out: set[str] = set()
     for d in fn.decorator_list:
         node = d.func if isinstance(d, ast.Call) else d
         if isinstance(node, ast.Attribute):
@@ -257,7 +257,8 @@ def _check_shape_mismatch(mod: Module,
 
 # --------------------------------------------------------------- RL203/204
 
-def _kernel_bodies(mod: Module):
+def _kernel_bodies(mod: Module) -> Iterator[
+        ast.FunctionDef | ast.AsyncFunctionDef]:
     for node in ast.walk(mod.tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             names = [a.arg for a in node.args.args + node.args.posonlyargs]
@@ -316,7 +317,8 @@ def _literal_tuple(node: ast.expr | None) -> tuple[int, ...] | None:
     return None
 
 
-def _blockspec_tiles(node: ast.expr) -> tuple[ast.Call, tuple] | None:
+def _blockspec_tiles(
+        node: ast.expr) -> tuple[ast.Call, tuple[ast.expr, ...]] | None:
     if isinstance(node, ast.Call):
         f = node.func
         leaf = f.attr if isinstance(f, ast.Attribute) else (

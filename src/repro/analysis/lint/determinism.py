@@ -123,7 +123,9 @@ def _check_wall_clock(mod: Module) -> Iterator[Finding]:
 
 # ------------------------------------------------------- set-iteration rule
 
-def _scopes(tree: ast.Module):
+def _scopes(tree: ast.Module) -> Iterator[
+        tuple[ast.Module | ast.FunctionDef | ast.AsyncFunctionDef,
+              list[ast.stmt]]]:
     """Yield (scope_node, body) for the module and every function def."""
     yield tree, tree.body
     for node in ast.walk(tree):
@@ -131,7 +133,7 @@ def _scopes(tree: ast.Module):
             yield node, node.body
 
 
-def _walk_scope(body: list[ast.stmt]):
+def _walk_scope(body: list[ast.stmt]) -> Iterator[ast.AST]:
     """Walk a scope's statements without descending into nested defs.
 
     Nested functions are their own scope (own env, own params); yielding
@@ -235,7 +237,7 @@ class _FloatEnv:
     still sample what this rule cannot prove.
     """
 
-    def __init__(self, mod: Module):
+    def __init__(self, mod: Module) -> None:
         self.mod = mod
         self.names: set[str] = set()
 

@@ -1,0 +1,233 @@
+"""Per-function effect inference over the call graph (reprolint v2).
+
+Mirrors the declaration vocabulary of ``repro.core.effects`` (the linter
+stays import-free of the package it checks; a unit test pins the two sets
+equal) and infers, for every function in the call graph, which effects
+its body performs directly and which it reaches transitively.
+
+Inference is deliberately under-approximate — it only records effects it
+can *prove* from local syntax plus the recorded type facts:
+
+- ``commit-mutate``: rebinding/in-place write of a ``_commit`` attribute,
+  or an RL106-style mutation of a tracked ``FlowTable``/
+  ``FlatAssignState`` object. Skipped inside constructors (building an
+  object is not mutating committed state) and inside the owning modules
+  (``core/engine.py``, ``core/assignment.py``) where these arrays are
+  legitimately written — mirroring RL106's owner exemption.
+- ``fingerprint-mutate``: a store that targets a fabric-fingerprint
+  input (``core_up`` / ``delta_k`` attribute rebinding, element write,
+  or in-place mutator call). Skipped inside constructors.
+- ``watermark``: any read or write of a ``_gc_floor`` attribute.
+  Skipped inside constructors.
+- ``cache-read``/``cache-write``/``cache-purge``: ``.get``/``.put``/
+  ``.invalidate`` called on an expression whose recorded type is
+  ``ProgramCache`` — plus the ``ProgramCache`` methods themselves.
+- ``cache-rekey``: a call to ``instance_key`` passing a ``fabric=``
+  keyword (the re-key alternative to purging).
+- ``rng-consume``: a consuming method (``choice``, ``integers``, …)
+  called on an rng-ish expression (parameter named/annotated as a
+  generator, local assigned from ``default_rng``/``PCG64``, or a
+  ``self.rng``/``self._rng`` attribute).
+
+Propagation is a transitive closure over the call graph with one
+exception: ``commit-mutate`` does NOT propagate out of a callee whose
+``@effects`` declaration includes it — declaring the effect is what
+*blesses* an entry point (RL302), so the mutation is accounted for there
+and callers above it stay clean.
+"""
+from __future__ import annotations
+
+import ast
+
+from .callgraph import CallGraph, FuncNode
+from .common import parse_annotation
+from .determinism import _committed_vars, _mutations
+
+__all__ = ["EFFECTS", "infer_direct", "propagate", "rng_names",
+           "is_rng_expr", "consumed_rng_attrs"]
+
+#: Mirror of ``repro.core.effects.EFFECTS`` (test-pinned identical).
+EFFECTS: frozenset[str] = frozenset({
+    "commit-mutate",
+    "rng-consume",
+    "cache-read",
+    "cache-write",
+    "cache-purge",
+    "cache-rekey",
+    "watermark",
+    "fingerprint-mutate",
+})
+
+#: Generator methods that advance the PCG64 stream.
+RNG_CONSUMERS: frozenset[str] = frozenset({
+    "random", "choice", "integers", "uniform", "normal", "standard_normal",
+    "shuffle", "permutation", "permuted", "exponential", "poisson", "gamma",
+    "beta", "binomial", "bytes",
+})
+#: Constructor leaf names that mint a fresh RNG stream (RL303 reseed).
+RNG_CTOR_LEAVES: frozenset[str] = frozenset({
+    "default_rng", "PCG64", "SeedSequence", "Random"})
+RNG_PARAM_NAMES: frozenset[str] = frozenset({"rng", "gen", "generator"})
+RNG_ATTR_NAMES: frozenset[str] = frozenset({"rng", "_rng"})
+
+_FINGERPRINT_ATTRS = frozenset({"core_up", "delta_k"})
+_WATERMARK_ATTRS = frozenset({"_gc_floor"})
+_ARRAY_MUTATORS = frozenset({"fill", "sort", "put", "itemset", "resize",
+                             "setflags"})
+_CACHE_METHODS = {"get": "cache-read", "put": "cache-write",
+                  "invalidate": "cache-purge"}
+#: committed-state owners where in-place writes are the implementation,
+#: not a protocol violation (mirrors determinism._OWNER_FILES)
+_COMMIT_OWNERS = frozenset({"engine.py", "assignment.py"})
+
+
+def _leaf(node: ast.expr) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def rng_names(fn: FuncNode) -> set[str]:
+    """Local names provably bound to an RNG generator inside ``fn``."""
+    out: set[str] = set()
+    a = fn.node.args
+    for p in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+        ann = parse_annotation(p.annotation)
+        if p.arg in RNG_PARAM_NAMES or (
+                ann.kind == "class" and ann.class_name == "Generator"):
+            out.add(p.arg)
+    for node in ast.walk(fn.node):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.value, ast.Call)
+                and _leaf(node.value.func) in RNG_CTOR_LEAVES):
+            continue
+        target = node.targets[0]
+        if isinstance(target, ast.Name):
+            out.add(target.id)
+    return out
+
+
+def is_rng_expr(expr: ast.expr, names: set[str]) -> bool:
+    """True when ``expr`` is provably an RNG generator in this function."""
+    if isinstance(expr, ast.Name):
+        return expr.id in names
+    if isinstance(expr, ast.Attribute):
+        return expr.attr in RNG_ATTR_NAMES
+    return False
+
+
+def consumed_rng_attrs(fn: FuncNode) -> set[str]:
+    """Instance RNG attributes (``self.rng``/``self._rng``) ``fn`` draws
+    from directly — RL303's single-consumer check groups these per class."""
+    out: set[str] = set()
+    for node in ast.walk(fn.node):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in RNG_CONSUMERS):
+            base = node.func.value
+            if (isinstance(base, ast.Attribute)
+                    and base.attr in RNG_ATTR_NAMES
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id == "self"):
+                out.add(base.attr)
+    return out
+
+
+def _store_targets(node: ast.AST) -> list[ast.expr]:
+    if isinstance(node, ast.Assign):
+        return list(node.targets)
+    if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        return [node.target]
+    return []
+
+
+def _fingerprint_store(node: ast.AST) -> bool:
+    for t in _store_targets(node):
+        if isinstance(t, ast.Attribute) and t.attr in _FINGERPRINT_ATTRS:
+            return True
+        if isinstance(t, ast.Subscript) and \
+                _leaf(t.value) in _FINGERPRINT_ATTRS:
+            return True
+    if (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _ARRAY_MUTATORS
+            and _leaf(node.func.value) in _FINGERPRINT_ATTRS):
+        return True
+    return False
+
+
+def _commit_store(node: ast.AST) -> bool:
+    for t in _store_targets(node):
+        if isinstance(t, ast.Attribute) and t.attr == "_commit":
+            return True
+        if isinstance(t, ast.Subscript) and _leaf(t.value) == "_commit":
+            return True
+    return False
+
+
+def infer_direct(graph: CallGraph) -> dict[str, set[str]]:
+    """Direct (intrinsic) effect set for every node in the graph."""
+    return {uid: _direct(graph, fn) for uid, fn in graph.nodes.items()}
+
+
+def _direct(graph: CallGraph, fn: FuncNode) -> set[str]:
+    eff: set[str] = set()
+    mod = fn.module
+    locals_ = graph.local_types(fn)
+    rngs = rng_names(fn)
+    if fn.cls == "ProgramCache" and fn.name in _CACHE_METHODS:
+        eff.add(_CACHE_METHODS[fn.name])
+    commit_exempt = fn.is_ctor or (
+        mod.is_core and mod.basename in _COMMIT_OWNERS)
+    tracked: dict[str, str] = {} if commit_exempt else _committed_vars(
+        mod, fn.node, fn.node.body)
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                cache_eff = _CACHE_METHODS.get(f.attr)
+                if cache_eff is not None and graph.expr_class(
+                        fn, f.value, locals_) == "ProgramCache":
+                    eff.add(cache_eff)
+                if f.attr in RNG_CONSUMERS and is_rng_expr(f.value, rngs):
+                    eff.add("rng-consume")
+            if _leaf(f) == "instance_key" and any(
+                    kw.arg == "fabric" for kw in node.keywords):
+                eff.add("cache-rekey")
+        if not fn.is_ctor:
+            if _fingerprint_store(node):
+                eff.add("fingerprint-mutate")
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in _WATERMARK_ATTRS:
+                eff.add("watermark")
+            if not commit_exempt and (
+                    _commit_store(node)
+                    or (tracked and any(_mutations(mod, node, tracked)))):
+                eff.add("commit-mutate")
+    return eff
+
+
+def propagate(graph: CallGraph,
+              direct: dict[str, set[str]]) -> dict[str, frozenset[str]]:
+    """Transitive effect sets (fixpoint), with the RL302 blessed-stop:
+    ``commit-mutate`` never escapes a callee that declares it."""
+    eff: dict[str, set[str]] = {uid: set(s) for uid, s in direct.items()}
+    changed = True
+    while changed:
+        changed = False
+        for uid, callees in graph.edges.items():
+            mine = eff[uid]
+            for callee in callees:
+                node = graph.nodes[callee]
+                inherit = eff[callee]
+                if (node.declared is not None
+                        and "commit-mutate" in node.declared
+                        and "commit-mutate" in inherit):
+                    inherit = inherit - {"commit-mutate"}
+                new = inherit - mine
+                if new:
+                    mine |= new
+                    changed = True
+    return {uid: frozenset(s) for uid, s in eff.items()}

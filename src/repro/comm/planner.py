@@ -26,6 +26,7 @@ from repro.core import (
     validate,
 )
 from repro.core.coflow import Coflow
+from repro.core.effects import effects
 
 __all__ = ["OCSFabric", "PlanReport", "plan_circuits", "plan_circuits_service"]
 
@@ -91,6 +92,8 @@ def plan_circuits(
     return out
 
 
+@effects("cache-read", "cache-write", "cache-rekey",
+         "rng-consume")
 def plan_circuits_service(
     coflows: list[Coflow],
     fabric: OCSFabric = OCSFabric(),

@@ -19,6 +19,7 @@ import numpy as np
 
 from .arrays import B1, F8, I8
 from .coflow import Flow, Instance, extract_flows, nonzero_flows
+from .effects import effects
 from .lower_bounds import CoreState
 
 __all__ = [
@@ -245,6 +246,7 @@ class FlatAssignState:
                               float(self.rates[k]))
             self._rho[k] = 0.0
 
+    @effects("rng-consume")
     def assign(self, fi: Annotated[I8, "F"], fj: Annotated[I8, "F"],
                sizes: Annotated[F8, "F"], *,
                up: Annotated[B1, "K"] | None = None) -> Annotated[I8, "F"]:

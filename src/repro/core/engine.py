@@ -44,6 +44,7 @@ from .assignment import (
 from .arrays import F8, I8
 from .circuit_scheduler import ScheduledFlow
 from .coflow import Coflow, Instance, OnlineInstance, extract_flows
+from .effects import effects
 from .ordering import order_coflows, priority_scores
 from .scheduler import Schedule
 
@@ -808,32 +809,23 @@ _COMMIT_FIELDS = _PEND_FIELDS + (
 )
 
 
-def _touched_rows(rin: np.ndarray, rout: np.ndarray, n_res: int,
-                  n_new_from: int) -> np.ndarray:
-    """Delta-scheduling touched set: which pending rows a new arrival can
-    perturb.
+def _resource_components(rin: np.ndarray, rout: np.ndarray,
+                         n_res: int) -> np.ndarray:
+    """Per-row component labels of the bipartite resource-sharing graph.
 
     Flows interact ONLY through shared (core, port) resources — the event
     loop starts a flow by comparing it against the other users of its two
     resources, and nothing else. So the pending set decomposes exactly into
-    connected components of the bipartite resource-sharing graph (ingress
-    resources, egress resources offset by ``n_res``; one edge per flow), and
-    a batch of new rows (indices ``>= n_new_from``) can only change the
-    tentative times of rows in components it touches: cross-component flows
-    share no resource with any new flow, directly or transitively, so every
-    availability horizon and first-pending-candidate test they see is
-    unchanged (the not-all-stop property of the OCS model, applied to
-    scheduling work instead of circuits).
+    connected components of the bipartite graph over ingress resources and
+    egress resources (offset by ``n_res``), one edge per flow. Returns, for
+    each row, the union-find root of its ingress resource — rows share a
+    label iff they are in the same component (the row's egress resource is
+    always unioned with its ingress, so either endpoint labels it).
 
-    Returns a boolean row mask. Union-find over the ``2 * n_res`` resource
-    nodes with one union per *distinct* resource pair — O(unique pairs +
-    n_res), independent of the backlog's flow count.
+    Union-find over the ``2 * n_res`` resource nodes with one union per
+    *distinct* resource pair — O(unique pairs + n_res), independent of the
+    backlog's flow count.
     """
-    F = rin.size
-    if n_new_from <= 0:
-        return np.ones(F, dtype=bool)
-    if n_new_from >= F:
-        return np.zeros(F, dtype=bool)
     span = 2 * n_res
     pairs = np.unique(rin * span + (rout + n_res))
     parent = list(range(span))
@@ -850,12 +842,31 @@ def _touched_rows(rin: np.ndarray, rout: np.ndarray, n_res: int,
         a, b = find(p // span), find(p % span)
         if a != b:
             parent[b] = a
-    touched = np.zeros(span, dtype=bool)
-    for r in np.unique(rin[n_new_from:]).tolist():
-        touched[find(r)] = True
     root_of = np.fromiter((find(r) for r in range(n_res)),
                           dtype=np.int64, count=n_res)
-    return touched[root_of[rin]]
+    return root_of[rin]
+
+
+def _touched_rows(rin: np.ndarray, rout: np.ndarray, n_res: int,
+                  n_new_from: int) -> np.ndarray:
+    """Delta-scheduling touched set: which pending rows a new arrival can
+    perturb.
+
+    A batch of new rows (indices ``>= n_new_from``) can only change the
+    tentative times of rows in resource components it touches:
+    cross-component flows share no resource with any new flow, directly or
+    transitively, so every availability horizon and first-pending-candidate
+    test they see is unchanged (the not-all-stop property of the OCS model,
+    applied to scheduling work instead of circuits). Returns a boolean row
+    mask over the components of ``_resource_components``.
+    """
+    F = rin.size
+    if n_new_from <= 0:
+        return np.ones(F, dtype=bool)
+    if n_new_from >= F:
+        return np.zeros(F, dtype=bool)
+    roots = _resource_components(rin, rout, n_res)
+    return np.isin(roots, roots[n_new_from:])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -888,6 +899,11 @@ class TickCommit:
     delta_f: Annotated[F8, "Fc"] | None = None  # set after a DeltaDrift
     faults: tuple = ()       # (FaultApplication, ...) applied this tick
     unfinalized: tuple = ()  # gids whose final CCT was retracted this tick
+    #: resource-sharing components in this tick's pending set, and how many
+    #: of them the tick actually re-scheduled (delta-scheduling telemetry;
+    #: both 0 when delta-scheduling is off, reserving, or nothing pends)
+    components_total: int = 0
+    components_touched: int = 0
 
     @property
     def n_flows(self) -> int:
@@ -966,6 +982,12 @@ class FabricState:
         #: cache vs rows re-run through the event loop, cumulative)
         self.tent_reused = 0
         self.tent_recomputed = 0
+        #: resource-component telemetry (cumulative over ticks): how many
+        #: components the pending sets decomposed into, and how many of
+        #: them ticks actually re-scheduled — the ROADMAP's
+        #: delta-scheduling-leverage diagnostic
+        self.components_total = 0
+        self.components_touched = 0
         # per-gid registry (appended at admission)
         self._cid: list[int] = []
         self._weight: list[float] = []
@@ -1076,6 +1098,7 @@ class FabricState:
         self.free_in = free_in
         self.free_out = free_out
 
+    @effects("commit-mutate", "watermark")
     def _gc_commits(self, t_now: float) -> None:
         """Watermark GC over the retained commits (satellite of the fault
         model): a fault discovered late may be timestamped no earlier than
@@ -1135,6 +1158,8 @@ class FabricState:
             for name, _dt in _PEND_FIELDS
         }
 
+    @effects("commit-mutate", "fingerprint-mutate", "watermark",
+             "rng-consume")
     def apply_fault(self, event: "FaultEvent") -> "FaultApplication":
         """Apply one topology-churn event (see ``core.fault``) right now.
 
@@ -1334,6 +1359,8 @@ class FabricState:
             "intra": intra,
         }
 
+    @effects("commit-mutate", "fingerprint-mutate", "watermark",
+             "rng-consume")
     def step(self, coflows: Sequence[Coflow],
              releases: Annotated[F8, "B"], t_now: float) -> TickCommit:
         """One service tick: admit ``coflows`` (released in
@@ -1386,6 +1413,7 @@ class FabricState:
         # per-flow reconfiguration delay; scalar fast path unless a
         # DeltaDrift moved some core off the nominal delta
         dl_f = None if not self._drifted else self.delta_k[pend["core"]]
+        comp_total = comp_touched = 0
         if self.scheduling == "reserving":
             # Reservations commit immediately in arrival order and never
             # move, so the horizon arrays ARE the reservation state.
@@ -1411,6 +1439,11 @@ class FabricState:
                 dirty = _touched_rows(rin, rout, n_res, n_old)
             else:
                 dirty = np.ones(F, dtype=bool)
+            if self.delta_schedule and F:
+                roots = _resource_components(rin, rout, n_res)
+                comp_total = int(np.unique(roots).size)
+                comp_touched = (int(np.unique(roots[dirty]).size)
+                                if dirty.any() else 0)
             sub = np.nonzero(dirty)[0]
             self.tent_reused += int(F - sub.size)
             self.tent_recomputed += int(sub.size)
@@ -1472,7 +1505,11 @@ class FabricState:
             faults=fault_apps,
             unfinalized=tuple(
                 g for app in fault_apps for g in app.unfinalized),
+            components_total=comp_total,
+            components_touched=comp_touched,
         )
+        self.components_total += comp_total
+        self.components_touched += comp_touched
         self._pend = {name: pend[name][~commit] for name, _dt in _PEND_FIELDS}
         self._tent = (None if self.scheduling == "reserving"
                       else t_est[~commit])

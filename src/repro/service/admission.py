@@ -52,6 +52,7 @@ from collections import deque
 import numpy as np
 
 from repro.core.coflow import Coflow
+from repro.core.effects import effects
 
 __all__ = ["ArrivalRequest", "AdmissionPolicy", "BackpressureError",
            "AdmissionQueue"]
@@ -239,6 +240,7 @@ class AdmissionQueue:
                 self.dropped += 1
         return deque(kept)
 
+    @effects()
     def drain(self, t_now: float, t_floor: float,
               flow_budget: int | None = None) -> list[ArrivalRequest]:
         """Dequeue every request released at or before ``t_now`` that fits

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.arrays import F8
 from repro.core.coflow import Instance
+from repro.core.effects import effects
 
 __all__ = ["instance_key", "ProgramCache"]
 
@@ -84,6 +85,7 @@ class ProgramCache:
     def __len__(self) -> int:
         return len(self._store)
 
+    @effects("cache-read")
     def get(self, key: str) -> object | None:
         """Program for ``key``, or None (counts a hit/miss either way)."""
         try:
@@ -95,12 +97,14 @@ class ProgramCache:
         self.hits += 1
         return val
 
+    @effects("cache-write")
     def put(self, key: str, program: object) -> None:
         self._store[key] = program
         self._store.move_to_end(key)
         while len(self._store) > self.capacity:
             self._store.popitem(last=False)
 
+    @effects("cache-purge")
     def invalidate(self, pred: Callable[[object], bool]) -> int:
         """Drop every entry whose value satisfies ``pred``; returns the
         count. The fault path uses this to purge programs that matched

@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.arrays import F8
 from repro.core.batch import ResultTable, run_batch
 from repro.core.coflow import Coflow, Instance, OnlineInstance
+from repro.core.effects import effects
 from repro.core.engine import (
     FabricState,
     INCREMENTAL_SCHEDULINGS,
@@ -124,6 +125,10 @@ class TickReport:
     shed: int = 0          # requests moved to standby this tick
     backfilled: int = 0    # standby requests re-queued this tick
     standby_depth: int = 0  # standby backlog after the tick
+    #: resource-sharing components in the tick's pending set / components
+    #: the tick re-scheduled (delta-scheduling leverage; 0/0 when off)
+    components_total: int = 0
+    components_touched: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,6 +206,8 @@ class FabricManager:
             submitted_s=time.perf_counter(),
             score=score, n_flows=coflow.num_flows))
 
+    @effects("fingerprint-mutate", "watermark", "cache-purge",
+             "rng-consume")
     def tick(self, t_now: float) -> TickReport:
         """One service tick at stream time ``t_now``: drain the admission
         queue (under the admission policy's flow budget), schedule pending
@@ -260,7 +267,9 @@ class FabricManager:
             unfinalized=len(commit.unfinalized),
             deferred=q.deferred - before[0], shed=q.shed - before[1],
             backfilled=q.backfilled - before[2],
-            standby_depth=q.standby_depth)
+            standby_depth=q.standby_depth,
+            components_total=commit.components_total,
+            components_touched=commit.components_touched)
         self.reports.append(report)
         self._n_ticks += 1
         self._flows_committed += commit.n_flows
@@ -286,6 +295,7 @@ class FabricManager:
         return self._tick(np.inf, capped=False)
 
     # -- fault plane --------------------------------------------------------
+    @effects("cache-purge")
     def _register_fault(self, app: "FaultApplication") -> FaultReport:
         """Turn one ``FaultApplication`` into its corrective actions: emit
         teardown events for every aborted circuit, retract retracted final
@@ -311,6 +321,8 @@ class FabricManager:
         self.fault_reports.append(report)
         return report
 
+    @effects("fingerprint-mutate", "watermark", "cache-purge",
+             "rng-consume")
     def report_fault(self, event: "FaultEvent") -> FaultReport:
         """Apply one topology-churn event (``core.fault``) right now.
 
@@ -340,6 +352,8 @@ class FabricManager:
         return self.state.ccts()
 
     # -- one-shot plane ----------------------------------------------------
+    @effects("cache-read", "cache-write", "cache-rekey",
+             "rng-consume")
     def schedule_instance(
         self,
         inst: Instance | OnlineInstance,
@@ -484,6 +498,8 @@ class FabricManager:
                 / (self.state.tent_reused + self.state.tent_recomputed)
                 if (self.state.tent_reused
                     + self.state.tent_recomputed) else 0.0),
+            "components_total": self.state.components_total,
+            "components_touched": self.state.components_touched,
             "commits_retained": self.state.n_commits_retained,
             "commits_gced": self.state.commits_gced,
             "cache_hits": self.cache.hits,

@@ -1,0 +1,18 @@
+"""RL301: fingerprint perturbation without a ProgramCache purge/re-key."""
+# reprolint: pretend-path=src/repro/service/fake_churn.py
+import numpy as np
+
+from repro.service.cache import ProgramCache
+
+
+class ChurnManager:
+    def __init__(self) -> None:
+        self.cache = ProgramCache(capacity=8)
+        self.core_up = np.ones(4, dtype=bool)
+
+    def drop_core(self, k: int) -> None:
+        self.core_up[k] = False
+
+    def drop_core_purged(self, k: int) -> None:
+        self.core_up[k] = False
+        self.cache.invalidate(lambda prog: True)

@@ -1,0 +1,21 @@
+"""RL302: committed-row mutation without a blessing declaration."""
+# reprolint: pretend-path=src/repro/service/fake_rollback.py
+from repro.core.effects import effects
+
+
+class Registry:
+    def __init__(self) -> None:
+        self._commit = {}
+
+    def rollback(self, cid: int) -> None:
+        self._commit = {}
+
+    @effects("commit-mutate")
+    def blessed_rollback(self, cid: int) -> None:
+        self._commit = {}
+
+    def caller(self, cid: int) -> None:
+        self.blessed_rollback(cid)
+
+    def leaky_caller(self, cid: int) -> None:
+        self.rollback(cid)

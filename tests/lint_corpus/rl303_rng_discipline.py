@@ -1,0 +1,24 @@
+"""RL303: RNG threading discipline — no reseed, no fork, one consumer."""
+# reprolint: pretend-path=src/repro/core/fake_rng.py
+import numpy as np
+
+
+def reseeds(rng, n: int):
+    local = np.random.default_rng(0)
+    return local.integers(n)
+
+
+def forks(rng, n: int):
+    child = rng.spawn(1)[0]
+    return child.integers(n)
+
+
+class TwoConsumers:
+    def __init__(self, seed: int) -> None:
+        self._rng = np.random.default_rng(seed)
+
+    def first(self, n: int):
+        return self._rng.integers(n)
+
+    def second(self, n: int):
+        return self._rng.choice(n)

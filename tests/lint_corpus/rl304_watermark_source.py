@@ -1,0 +1,24 @@
+"""RL304: watermark time arguments must come from sanctioned tick sources."""
+# reprolint: pretend-path=src/repro/core/fake_gc.py
+import numpy as np
+
+from repro.core.effects import effects
+
+
+class Retainer:
+    def __init__(self) -> None:
+        self._gc_floor = -np.inf
+
+    @effects("watermark")
+    def gc(self, t_now: float) -> None:
+        self._gc_floor = t_now
+
+    def on_tick(self, t_now: float) -> None:
+        self.gc(t_now)
+
+    def finalize(self) -> None:
+        self.gc(np.inf)
+
+    def sloppy(self, t_now: float) -> None:
+        self.gc(t_now + 1.0)
+        self.gc(max(t_now, 0.0))

@@ -1,0 +1,25 @@
+"""RL305: declared effect sets must cover inferred reality."""
+# reprolint: pretend-path=src/repro/service/fake_effects.py
+from repro.core.effects import effects
+from repro.service.cache import ProgramCache
+
+
+@effects("made-up-effect")
+def bad_vocab() -> None:
+    return None
+
+
+@effects()
+def claims_pure(cache: ProgramCache) -> None:
+    cache.invalidate(lambda p: True)
+
+
+@effects("cache-purge")
+def honest(cache: ProgramCache) -> None:
+    cache.invalidate(lambda p: True)
+
+
+@effects("cache-read")
+def undeclared_write(cache: ProgramCache, key: str) -> None:
+    cache.get(key)
+    cache.put(key, object())

@@ -1,0 +1,177 @@
+"""Resource-component telemetry (PR 8 satellite): ``components_total`` /
+``components_touched`` through TickCommit -> TickReport -> summary().
+
+The ROADMAP's delta-scheduling-leverage item needs to diagnose WHY the
+observed tentative-reuse fraction is low (0.1–8.8% in BENCH_overload):
+if every tick's pending set collapses into one giant resource component,
+splicing can never win regardless of arrival rate. These counters expose
+the decomposition the splice operates on.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import sample_online_instance, synth_fb_trace
+from repro.core.engine import (
+    FabricState,
+    _resource_components,
+    _touched_rows,
+)
+from repro.service import FabricConfig, FabricManager
+
+TRACE = synth_fb_trace(200, seed=2026)
+RATES = (10.0, 20.0, 30.0)
+
+
+def _stream(N=10, M=16, seed=0, span=300.0, delta=8.0):
+    return sample_online_instance(TRACE, N=N, M=M, rates=RATES, delta=delta,
+                                  span=span, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# _resource_components unit behavior
+# ---------------------------------------------------------------------------
+
+def test_component_labels_partition_rows():
+    # rows 0,1 share ingress 0; row 2 lives on (1, 3) alone
+    rin = np.array([0, 0, 1], dtype=np.int64)
+    rout = np.array([0, 1, 3], dtype=np.int64)
+    roots = _resource_components(rin, rout, 4)
+    assert roots[0] == roots[1]
+    assert roots[2] != roots[0]
+
+
+def test_component_labels_bridge_via_egress():
+    # rows 0 and 1 share no ingress, but row 2 bridges their egresses
+    rin = np.array([0, 1, 2], dtype=np.int64)
+    rout = np.array([0, 1, 0], dtype=np.int64)
+    roots = _resource_components(rin, rout, 3)
+    assert roots[0] == roots[2]
+    assert roots[1] != roots[0]
+    rout2 = np.array([0, 1, 1], dtype=np.int64)
+    roots2 = _resource_components(rin, rout2, 3)
+    assert roots2[1] == roots2[2]
+    assert roots2[0] != roots2[1]
+
+
+def _brute_force_touched(rin, rout, n_new_from):
+    """Independent oracle: BFS over rows sharing a resource endpoint."""
+    F = rin.size
+    frontier = set(range(n_new_from, F))
+    touched = set(frontier)
+    while frontier:
+        res_in = {rin[i] for i in touched}
+        res_out = {rout[i] for i in touched}
+        grown = {i for i in range(F)
+                 if rin[i] in res_in or rout[i] in res_out}
+        frontier = grown - touched
+        touched |= grown
+    return np.array([i in touched for i in range(F)])
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_touched_rows_matches_bfs_oracle(seed):
+    rng = np.random.default_rng(seed)
+    F, n_res = 40, 12
+    rin = rng.integers(0, n_res, size=F)
+    rout = rng.integers(0, n_res, size=F)
+    k = int(rng.integers(1, F))
+    got = _touched_rows(rin, rout, n_res, k)
+    want = _brute_force_touched(rin, rout, k)
+    assert np.array_equal(got, want)
+    # and the mask is exactly "same component as some new row"
+    roots = _resource_components(rin, rout, n_res)
+    assert np.array_equal(got, np.isin(roots, roots[k:]))
+
+
+# ---------------------------------------------------------------------------
+# per-tick counters on FabricState
+# ---------------------------------------------------------------------------
+
+def test_cold_tick_touches_every_component():
+    oinst = _stream(M=12, seed=2, span=10.0)
+    inst = oinst.inst
+    st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                     delta_schedule=True)
+    rel = [float(r) for r in oinst.releases]
+    commit = st.step(list(inst.coflows), rel, float(max(rel)))
+    assert commit.components_total >= 1
+    # no tentative cache yet: the whole pending set re-schedules
+    assert commit.components_touched == commit.components_total
+
+
+def test_empty_tick_touches_zero_components():
+    oinst = _stream(M=12, seed=2, span=10.0)
+    inst = oinst.inst
+    st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                     delta_schedule=True)
+    rel = [float(r) for r in oinst.releases]
+    st.step(list(inst.coflows), rel, float(max(rel)))
+    if st.n_pending_flows == 0:
+        pytest.skip("workload fully committed in one tick")
+    commit = st.step([], [], float(max(rel)) + 1e-6)
+    assert commit.components_total >= 1
+    assert commit.components_touched == 0
+
+
+def test_disabled_delta_reports_zero():
+    oinst = _stream(M=12, seed=2, span=10.0)
+    inst = oinst.inst
+    st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                     delta_schedule=False)
+    rel = [float(r) for r in oinst.releases]
+    commit = st.step(list(inst.coflows), rel, float(max(rel)))
+    assert commit.components_total == 0
+    assert commit.components_touched == 0
+    assert st.components_total == 0
+
+
+def test_state_counters_accumulate_across_ticks():
+    oinst = _stream(M=20, seed=1, span=60.0)
+    inst = oinst.inst
+    st = FabricState(rates=inst.rates, delta=inst.delta, N=inst.N,
+                     delta_schedule=True)
+    order = np.argsort(oinst.releases, kind="stable")
+    ticks = np.linspace(oinst.releases.max() * 0.5,
+                        oinst.releases.max() * 1.5, 8)
+    nxt, tot, touch = 0, 0, 0
+    for t in ticks:
+        batch, rel = [], []
+        while nxt < order.size and oinst.releases[order[nxt]] <= t:
+            m = int(order[nxt])
+            batch.append(inst.coflows[m])
+            rel.append(float(oinst.releases[m]))
+            nxt += 1
+        commit = st.step(batch, rel, float(t))
+        assert 0 <= commit.components_touched <= commit.components_total
+        tot += commit.components_total
+        touch += commit.components_touched
+    assert st.components_total == tot
+    assert st.components_touched == touch
+    assert tot >= 1
+
+
+# ---------------------------------------------------------------------------
+# TickReport + summary() export
+# ---------------------------------------------------------------------------
+
+def test_manager_exports_component_telemetry():
+    oinst = _stream(N=8, M=14, seed=3, span=40.0)
+    mgr = FabricManager(FabricConfig(rates=RATES, delta=oinst.inst.delta,
+                                     N=8))
+    order = np.argsort(oinst.releases, kind="stable")
+    for m in order:
+        mgr.submit(oinst.inst.coflows[int(m)], float(oinst.releases[int(m)]))
+    rep = mgr.tick(float(oinst.releases.max()))
+    assert rep.components_total >= 1
+    assert rep.components_touched == rep.components_total
+    mgr.flush()
+    s = mgr.summary()
+    assert s["components_total"] == mgr.state.components_total
+    assert s["components_touched"] == mgr.state.components_touched
+    assert s["components_total"] == sum(r.components_total
+                                        for r in mgr.reports)
+    assert s["components_touched"] == sum(r.components_touched
+                                          for r in mgr.reports)
+    assert 1 <= s["components_touched"] <= s["components_total"]

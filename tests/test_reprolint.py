@@ -56,8 +56,11 @@ CORPUS_EXPECT = {
         (8, "float-eq"), (9, "float-eq"),
     ],
     "rl106_commit_mutation.py": [
+        # the RL302 protocol rule fires too: undeclared commit mutation
+        (9, "commit-finality"),
         (10, "commit-mutation"), (11, "commit-mutation"),
         (12, "commit-mutation"), (13, "commit-mutation"),
+        (16, "commit-finality"),
         (18, "commit-mutation"),
     ],
     "rl201_contract_missing.py": [
@@ -73,6 +76,23 @@ CORPUS_EXPECT = {
     ],
     "rl204_blockspec.py": [
         (8, "blockspec-shape"), (17, "blockspec-shape"),
+    ],
+    "rl301_cache_coherence.py": [
+        (13, "cache-coherence"),
+    ],
+    "rl302_commit_finality.py": [
+        (10, "commit-finality"), (20, "commit-finality"),
+    ],
+    "rl303_rng_discipline.py": [
+        (7, "rng-discipline"), (12, "rng-discipline"),
+        (23, "rng-discipline"),
+    ],
+    "rl304_watermark_source.py": [
+        (23, "watermark-source"), (24, "watermark-source"),
+    ],
+    "rl305_effect_mismatch.py": [
+        (8, "effect-mismatch"), (13, "effect-mismatch"),
+        (23, "effect-mismatch"),
     ],
 }
 
@@ -144,6 +164,14 @@ def test_cli_exit_codes_and_json(tmp_path):
     assert payload["finding_count"] == 0
     assert payload["suppression_count"] >= 1
     assert payload["files"] > 0
+    # RL30x protocol pass: call-graph statistics ride along in the report
+    proto = payload["protocol"]
+    assert proto["functions"] > 0 and proto["edges"] > 0
+    assert proto["declared"] >= 14
+    assert set(proto["effects"]) == {
+        "cache-purge", "cache-read", "cache-rekey", "cache-write",
+        "commit-mutate", "fingerprint-mutate", "rng-consume", "watermark"}
+    assert proto["effects"]["cache-purge"] > 0
 
     bad = _run_cli("--json", str(out),
                    str(CORPUS / "rl101_global_rng.py"))
@@ -153,3 +181,77 @@ def test_cli_exit_codes_and_json(tmp_path):
     assert payload["by_rule"] == {"global-rng": 3}
     assert all(set(f) >= {"rule", "code", "path", "line", "message"}
                for f in payload["findings"])
+
+
+# --------------------------------------------------------- effect vocabulary
+
+def test_effect_vocabulary_mirrors_core():
+    # the linter mirrors the runtime vocabulary instead of importing it
+    # (it must stay import-free of the package it checks); pin them equal
+    from repro.analysis.lint.effects import EFFECTS as lint_effects
+    from repro.core.effects import EFFECTS as core_effects
+    assert lint_effects == core_effects
+
+
+def test_effects_decorator_attaches_and_validates():
+    from repro.core.effects import effects
+
+    @effects("cache-read", "rng-consume")
+    def f() -> None:
+        return None
+
+    assert f.__effects__ == frozenset({"cache-read", "rng-consume"})
+    with pytest.raises(ValueError, match="unknown effect"):
+        effects("not-an-effect")
+
+
+# ------------------------------------------- mutation negative control (RL301)
+
+_PURGE_CALL = (
+    "            purged = self.cache.invalidate(\n"
+    "                lambda prog: bool(np.any(prog.core == k)))")
+
+
+def _lint_manager_trio(manager_source: str, tmp_path):
+    """Lint a (possibly mutated) copy of service/manager.py together with
+    the real engine + cache so cross-module effect propagation resolves.
+
+    The ``pretend-path`` directive is appended at EOF so every line number
+    in the copy matches the original above the mutation point."""
+    mutant = tmp_path / "manager_copy.py"
+    # assembled so this test file's own source does not match the
+    # pretend-path directive regex (it searches the whole file)
+    directive = "\n# reprolint: " + "pretend-path=" + \
+        "src/repro/service/manager.py\n"
+    mutant.write_text(manager_source + directive, encoding="utf-8")
+    report = lint_paths(
+        [mutant, REPO / "src" / "repro" / "core" / "engine.py",
+         REPO / "src" / "repro" / "service" / "cache.py"], root=REPO)
+    return mutant, report
+
+
+def test_unmutated_manager_trio_is_clean(tmp_path):
+    src = (REPO / "src" / "repro" / "service" / "manager.py").read_text(
+        encoding="utf-8")
+    assert _PURGE_CALL in src, "purge call text drifted; update _PURGE_CALL"
+    _, report = _lint_manager_trio(src, tmp_path)
+    assert report.ok, "\n".join(f.render() for f in report.findings)
+
+
+def test_deleting_report_fault_purge_trips_rl301(tmp_path):
+    src = (REPO / "src" / "repro" / "service" / "manager.py").read_text(
+        encoding="utf-8")
+    mutated = src.replace(_PURGE_CALL, "            purged = 0")
+    assert mutated != src
+    mutant, report = _lint_manager_trio(mutated, tmp_path)
+    assert not report.ok
+    def_line = next(
+        i for i, text in enumerate(mutated.splitlines(), start=1)
+        if text.lstrip().startswith("def report_fault("))
+    got = {(f.line, f.rule) for f in report.findings
+           if f.path == str(mutant)}
+    # the fault entry point now perturbs the fingerprint without ever
+    # reaching a purge: RL301 must fire exactly at its def line
+    assert (def_line, "cache-coherence") in got
+    # and the only findings the mutation introduces are cache-coherence
+    assert {rule for _, rule in got} == {"cache-coherence"}
