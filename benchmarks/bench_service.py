@@ -43,12 +43,16 @@ DELTA = 8.0
 
 
 def run_incremental(oinst: OnlineInstance, n_ticks: int,
-                    validate: bool = True) -> dict:
-    """Stream the instance through the service; returns summary + wall."""
+                    validate: bool = True, tracer=None) -> dict:
+    """Stream the instance through the service; returns summary + wall.
+
+    ``tracer=None`` inherits the process-wide default (``repro.obs``),
+    so ``run.py --trace-dir`` traces this harness without plumbing.
+    """
     inst = oinst.inst
     mgr = FabricManager(FabricConfig(
         rates=tuple(inst.rates), delta=inst.delta, N=inst.N,
-        max_queue_depth=max(64, inst.M)))
+        max_queue_depth=max(64, inst.M)), tracer=tracer)
     order = np.argsort(oinst.releases, kind="stable")
     rel = oinst.releases
     nxt = 0
@@ -128,6 +132,42 @@ def bench_cache(n_patterns: int = 6, n_requests: int = 60,
     }
 
 
+def bench_trace_overhead(oinst: OnlineInstance, n_ticks: int,
+                         repeats: int = 3) -> dict:
+    """Tracing cost on the incremental path: off vs on, same stream.
+
+    Best-of-``repeats`` wall per mode (min denoises scheduler jitter);
+    asserts the two runs commit bit-identical CCTs — the tracer only
+    observes, so the acceptance contract (<= 5% overhead, identical
+    schedules) is measured here rather than assumed.
+    """
+    from repro.obs.trace import NULL_TRACER, Tracer
+
+    walls: dict[str, list] = {"off": [], "on": []}
+    ccts: dict[str, np.ndarray] = {}
+    n_spans = 0
+    for _ in range(repeats):
+        out = run_incremental(oinst, n_ticks, validate=False,
+                              tracer=NULL_TRACER)
+        walls["off"].append(out["wall_s"])
+        ccts["off"] = out["_ccts"]
+        tr = Tracer()
+        out = run_incremental(oinst, n_ticks, validate=False, tracer=tr)
+        walls["on"].append(out["wall_s"])
+        ccts["on"] = out["_ccts"]
+        n_spans = sum(1 for r in tr.records if r["kind"] == "span")
+    assert np.array_equal(ccts["off"], ccts["on"]), \
+        "tracing perturbed the schedule"
+    off, on = min(walls["off"]), min(walls["on"])
+    return {
+        "untraced_s": off,
+        "traced_s": on,
+        "overhead_fraction": (on / off - 1.0) if off > 0 else 0.0,
+        "spans_per_run": n_spans,
+        "repeats": repeats,
+    }
+
+
 def main(N: int = 32, M: int = 500, n_ticks: int = 16,
          spans: tuple = (2.0, 1.0, 0.5), seed: int = 0,
          check_floor: bool = True) -> dict:
@@ -184,8 +224,17 @@ def main(N: int = 32, M: int = 500, n_ticks: int = 16,
           f"{cache['patterns']} patterns -> hit rate {cache['hit_rate']:.2f}, "
           f"miss wall {cache['miss_wall_s']:.2f}s vs hit wall "
           f"{cache['hit_wall_s']:.4f}s")
+
+    oi_small = sample_online_instance(trace, N=N, M=min(M, 200), rates=RATES,
+                                      delta=DELTA, span=mk * 0.5, seed=seed)
+    overhead = bench_trace_overhead(oi_small, n_ticks)
+    print(f"trace overhead: {overhead['untraced_s']:.3f}s untraced vs "
+          f"{overhead['traced_s']:.3f}s traced "
+          f"({overhead['overhead_fraction']:+.1%}, "
+          f"{overhead['spans_per_run']} spans/run; budget 5%)")
     return {"N": N, "M": M, "n_ticks": n_ticks, "offline_makespan": mk,
-            "rows": rows, "best_speedup": best, "cache": cache}
+            "rows": rows, "best_speedup": best, "cache": cache,
+            "trace_overhead": overhead}
 
 
 if __name__ == "__main__":

@@ -17,13 +17,36 @@ import sys
 import time
 
 
-def _section(name: str, fn, /, **kw) -> None:
-    """Run one benchmark section and emit its JSON artifact."""
+def _section(name: str, fn, /, trace_dir=None, **kw) -> None:
+    """Run one benchmark section and emit its JSON artifact.
+
+    With ``trace_dir`` set, a ``repro.obs`` tracer is installed as the
+    process-wide default for the section's duration, so every
+    ``FabricManager`` the section builds emits phase spans into
+    ``TRACE_<name>.jsonl`` (summarize/diff them with ``python -m
+    repro.obs``).
+    """
+    import os
+
     from benchmarks import common
 
     print("#" * 72)
+    tracer = prev = None
+    if trace_dir is not None:
+        from repro.obs.trace import Tracer, set_tracer
+        os.makedirs(trace_dir, exist_ok=True)
+        tracer = Tracer(os.path.join(trace_dir, f"TRACE_{name}.jsonl"))
+        prev = set_tracer(tracer)
     t0 = time.time()
-    payload = fn(**kw)
+    try:
+        payload = fn(**kw)
+    finally:
+        if tracer is not None:
+            from repro.obs.trace import set_tracer
+            set_tracer(prev)
+            tracer.close()
+            print(f"[{name}] trace: {tracer._sink_path} "
+                  f"({len(tracer.records)} records)")
     wall = time.time() - t0
     path = common.emit_json(name, payload, wall, **{
         k: v for k, v in kw.items() if isinstance(v, (int, float, str, tuple))
@@ -44,6 +67,9 @@ def main(argv=None) -> int:
     ap.add_argument("--out", type=str, default=None,
                     help="directory for BENCH_<name>.json artifacts "
                          "(default: $BENCH_OUT or benchmarks/out)")
+    ap.add_argument("--trace-dir", type=str, default=None,
+                    help="write a TRACE_<section>.jsonl phase trace per "
+                         "section (inspect with `python -m repro.obs`)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
@@ -101,11 +127,12 @@ def main(argv=None) -> int:
         ap.error(f"unknown section {args.section!r}; one of {known}")
     for name, fn, kw in sections:
         if args.section is None or args.section == name:
-            _section(name, fn, **kw)
+            _section(name, fn, trace_dir=args.trace_dir, **kw)
     if not args.skip_comm and args.section in (None, "comm_planner"):
         print("#" * 72)
         try:
-            _section("comm_planner", comm_planner.main)
+            _section("comm_planner", comm_planner.main,
+                     trace_dir=args.trace_dir)
         except Exception as e:  # the compile is heavy; report, don't die
             print(f"[comm_planner] skipped: {e}")
     print("#" * 72)

@@ -1,0 +1,80 @@
+"""Fabric observatory demo: trace a streamed service run, then inspect it.
+
+  PYTHONPATH=src python examples/observe_fabric.py [OUT_DIR]
+
+Streams a trace-derived arrival sequence through ``FabricManager`` with a
+``repro.obs`` tracer attached (including a mid-stream core failure, so the
+``fault/recover`` span shows up), writes the span trace as JSONL plus a
+Perfetto-loadable Chrome trace, and prints the same per-phase wall
+breakdown ``python -m repro.obs summarize`` would. CI's fast lane runs
+this script and schema-validates + archives the artifacts it writes.
+
+Inspect interactively afterwards:
+
+  python -m repro.obs summarize OUT_DIR/trace.jsonl
+  python -m repro.obs export-chrome OUT_DIR/trace.jsonl -o chrome.json
+  # then load chrome.json at https://ui.perfetto.dev
+"""
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import CoreDown, run_fast_online, sample_online_instance, synth_fb_trace
+from repro.obs import Tracer
+from repro.obs.cli import summarize, validate_records
+from repro.service import FabricConfig, FabricManager
+
+N, M, TICKS = 16, 60, 10
+RATES, DELTA = (10.0, 20.0, 30.0), 8.0
+
+out_dir = Path(sys.argv[1]) if len(sys.argv) > 1 else Path("obs_out")
+out_dir.mkdir(parents=True, exist_ok=True)
+
+trace = synth_fb_trace(526, seed=2026)
+offline = sample_online_instance(trace, N=N, M=M, rates=RATES, delta=DELTA,
+                                 span=0.0, seed=7)
+makespan = float(run_fast_online(offline, "ours").ccts.max())
+oinst = sample_online_instance(trace, N=N, M=M, rates=RATES, delta=DELTA,
+                               span=makespan, seed=7)
+
+tracer = Tracer(out_dir / "trace.jsonl")
+mgr = FabricManager(FabricConfig(rates=RATES, delta=DELTA, N=N,
+                                 validate_every_tick=True), tracer=tracer)
+
+order = np.argsort(oinst.releases, kind="stable")
+rel = oinst.releases
+nxt = 0
+ticks = np.linspace(makespan / TICKS, makespan, TICKS)
+print(f"tracing N={N} M={M} stream over {TICKS} ticks "
+      f"-> {out_dir / 'trace.jsonl'}")
+for i, T in enumerate(ticks):
+    while nxt < order.size and rel[order[nxt]] <= T:
+        m = int(order[nxt])
+        mgr.submit(oinst.inst.coflows[m], float(rel[m]))
+        nxt += 1
+    mgr.tick(float(T))
+    if i == TICKS // 2:  # mid-stream churn: a core fails and recovers
+        rep = mgr.report_fault(CoreDown(t=float(T), core=1))
+        print(f"  t={T:7.1f}  core 1 down: aborted {rep.aborted}, "
+              f"requeued {rep.requeued}")
+mgr.flush()
+tracer.close()
+
+problems = validate_records(tracer.records)
+assert not problems, problems
+assert tracer.open_spans == 0
+
+chrome = out_dir / "chrome_trace.json"
+with open(chrome, "w", encoding="utf-8") as fh:
+    json.dump(tracer.to_chrome_trace(), fh)
+
+summ = summarize(tracer.records)
+print(f"\n{len(tracer.records)} records, schema OK; phase breakdown:")
+for name in sorted(summ["phases"], key=lambda n: -summ["phases"][n]["total_s"]):
+    st = summ["phases"][name]
+    print(f"  {name:<20} x{int(st['count']):<5} total {st['total_s']:.4f}s")
+print(f"events: {summ['events'] or '(none)'}")
+print(f"\nwrote {chrome} — load it at https://ui.perfetto.dev")
+print(f"summary: {json.dumps(mgr.summary(), default=float)[:160]}...")

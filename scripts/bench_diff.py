@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Diff two BENCH_*.json artifact sets (files or directories).
+
+Thin alias for ``python -m repro.obs diff-bench`` so the CI bench-diff
+step and humans share one entry point:
+
+  PYTHONPATH=src python scripts/bench_diff.py baseline/ candidate/ --json
+
+Exit codes: 0 = compared (use ``--fail-on-flag`` to turn flagged leaves
+into exit 1), 2 = no artifact pairs found.
+"""
+import sys
+
+from repro.obs.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main(["diff-bench", *sys.argv[1:]]))

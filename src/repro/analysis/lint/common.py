@@ -157,6 +157,10 @@ class Module:
         return self.in_dir("repro", "kernels")
 
     @property
+    def is_obs(self) -> bool:
+        return self.in_dir("repro", "obs")
+
+    @property
     def scheduling_scope(self) -> bool:
         """core/ + service/ + kernels/ — where determinism rules bind hard."""
         return self.is_core or self.is_service or self.is_kernels

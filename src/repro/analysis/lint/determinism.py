@@ -11,9 +11,12 @@ that assumption a static property:
 - ``unseeded-rng``   (RL102): ``default_rng()`` / ``PCG64()`` /
   ``random.Random()`` without a seed is nondeterministic across runs.
 - ``wall-clock``     (RL103): ``time.time()`` / ``datetime.now()`` in
-  scheduling code (core/, service/, kernels/) makes schedules depend on
-  the host clock. ``perf_counter``/``monotonic`` stay legal: telemetry
-  may time, scheduling may not.
+  scheduling code (core/, service/, kernels/, obs/) makes schedules
+  depend on the host clock. ``perf_counter``/``monotonic`` are likewise
+  findings everywhere except the one sanctioned boundary,
+  ``repro/obs/clock.py`` — telemetry may time, but only through that
+  choke point, so "timing never feeds a scheduling decision" stays a
+  one-grep audit.
 - ``unordered-iteration`` (RL104): iterating a ``set`` (loops,
   comprehensions, ``sum``) feeds order-sensitive accumulation with an
   unordered container; dict iteration is insertion-ordered and exempt.
@@ -42,6 +45,10 @@ _WALL_CLOCK = {"time.time", "time.time_ns", "time.ctime", "time.localtime",
                "time.gmtime", "datetime.datetime.now",
                "datetime.datetime.utcnow", "datetime.datetime.today",
                "datetime.date.today"}
+# telemetry clocks: legal ONLY inside the sanctioned boundary module
+_PERF_CLOCK = {"time.perf_counter", "time.perf_counter_ns",
+               "time.monotonic", "time.monotonic_ns"}
+_SANCTIONED_CLOCK_MODULE = "repro/obs/clock.py"
 # committed-state class -> its owning module (basename under repro/core/)
 _OWNER_FILES = {"FlowTable": "engine.py", "FlatAssignState": "assignment.py"}
 _ARRAY_MUTATORS = {"fill", "sort", "put", "itemset", "resize", "setflags"}
@@ -60,8 +67,10 @@ _FLOAT_METHODS = {"max", "min", "sum", "copy", "item", "mean", "cumsum",
 
 def check_determinism(mod: Module) -> Iterator[Finding]:
     yield from _check_rng(mod)
-    if mod.scheduling_scope:
+    if (mod.scheduling_scope or mod.is_obs) and \
+            not mod.logical.endswith(_SANCTIONED_CLOCK_MODULE):
         yield from _check_wall_clock(mod)
+    if mod.scheduling_scope:
         yield from _check_set_iteration(mod)
     if (mod.is_core or mod.is_service) and (
             not mod.is_core or mod.basename not in _FLOAT_EQ_BLESSED):
@@ -117,8 +126,14 @@ def _check_wall_clock(mod: Module) -> Iterator[Finding]:
             yield Finding(
                 "wall-clock", str(mod.path), node.lineno, node.col_offset,
                 f"`{dotted}()` in scheduling code: schedules must be pure in "
-                f"(instance, seed); use time.perf_counter() for telemetry "
-                f"only")
+                f"(instance, seed); route telemetry timing through "
+                f"repro.obs.clock")
+        elif dotted in _PERF_CLOCK:
+            yield Finding(
+                "wall-clock", str(mod.path), node.lineno, node.col_offset,
+                f"`{dotted}()` outside the sanctioned clock boundary: "
+                f"telemetry timing must go through repro.obs.clock.now() "
+                f"so timing provably never feeds a scheduling decision")
 
 
 # ------------------------------------------------------- set-iteration rule

@@ -28,6 +28,11 @@ can *prove* from local syntax plus the recorded type facts:
   called on an rng-ish expression (parameter named/annotated as a
   generator, local assigned from ``default_rng``/``PCG64``, or a
   ``self.rng``/``self._rng`` attribute).
+- ``trace-emit``: ``.span``/``.event`` called on a tracer-ish expression
+  (parameter named/annotated as a tracer, local assigned from a
+  ``Tracer``/``NullTracer`` constructor or ``current_tracer()``, or a
+  ``self.tracer``/``self._tracer`` attribute) — plus the ``Tracer``
+  methods themselves. Mirrors the RNG heuristic exactly.
 
 Propagation is a transitive closure over the call graph with one
 exception: ``commit-mutate`` does NOT propagate out of a callee whose
@@ -44,7 +49,8 @@ from .common import parse_annotation
 from .determinism import _committed_vars, _mutations
 
 __all__ = ["EFFECTS", "infer_direct", "propagate", "rng_names",
-           "is_rng_expr", "consumed_rng_attrs"]
+           "is_rng_expr", "consumed_rng_attrs", "tracer_names",
+           "is_tracer_expr"]
 
 #: Mirror of ``repro.core.effects.EFFECTS`` (test-pinned identical).
 EFFECTS: frozenset[str] = frozenset({
@@ -56,6 +62,7 @@ EFFECTS: frozenset[str] = frozenset({
     "cache-rekey",
     "watermark",
     "fingerprint-mutate",
+    "trace-emit",
 })
 
 #: Generator methods that advance the PCG64 stream.
@@ -69,6 +76,13 @@ RNG_CTOR_LEAVES: frozenset[str] = frozenset({
     "default_rng", "PCG64", "SeedSequence", "Random"})
 RNG_PARAM_NAMES: frozenset[str] = frozenset({"rng", "gen", "generator"})
 RNG_ATTR_NAMES: frozenset[str] = frozenset({"rng", "_rng"})
+
+#: Tracer heuristics: the trace-emit mirror of the RNG name conventions.
+TRACER_PARAM_NAMES: frozenset[str] = frozenset({"tracer"})
+TRACER_ATTR_NAMES: frozenset[str] = frozenset({"tracer", "_tracer"})
+TRACER_CTOR_LEAVES: frozenset[str] = frozenset({
+    "Tracer", "NullTracer", "current_tracer"})
+TRACE_EMITTERS: frozenset[str] = frozenset({"span", "event"})
 
 _FINGERPRINT_ATTRS = frozenset({"core_up", "delta_k"})
 _WATERMARK_ATTRS = frozenset({"_gc_floor"})
@@ -115,6 +129,46 @@ def is_rng_expr(expr: ast.expr, names: set[str]) -> bool:
         return expr.id in names
     if isinstance(expr, ast.Attribute):
         return expr.attr in RNG_ATTR_NAMES
+    return False
+
+
+def tracer_names(fn: FuncNode) -> set[str]:
+    """Local names provably bound to a tracer inside ``fn``.
+
+    Mirrors :func:`rng_names`: parameters named/annotated as a tracer,
+    locals assigned from a tracer constructor (``Tracer``/``NullTracer``/
+    ``current_tracer``), and locals assigned from a ``self.tracer`` /
+    ``self._tracer`` attribute read (``tr = self._tracer`` is the hot-path
+    idiom in instrumented ticks).
+    """
+    out: set[str] = set()
+    a = fn.node.args
+    for p in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+        ann = parse_annotation(p.annotation)
+        if p.arg in TRACER_PARAM_NAMES or (
+                ann.kind == "class"
+                and ann.class_name in ("Tracer", "NullTracer")):
+            out.add(p.arg)
+    for node in ast.walk(fn.node):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        target = node.targets[0]
+        if not isinstance(target, ast.Name):
+            continue
+        v = node.value
+        if ((isinstance(v, ast.Call) and _leaf(v.func) in TRACER_CTOR_LEAVES)
+                or (isinstance(v, ast.Attribute)
+                    and v.attr in TRACER_ATTR_NAMES)):
+            out.add(target.id)
+    return out
+
+
+def is_tracer_expr(expr: ast.expr, names: set[str]) -> bool:
+    """True when ``expr`` is provably a tracer in this function."""
+    if isinstance(expr, ast.Name):
+        return expr.id in names
+    if isinstance(expr, ast.Attribute):
+        return expr.attr in TRACER_ATTR_NAMES
     return False
 
 
@@ -177,8 +231,11 @@ def _direct(graph: CallGraph, fn: FuncNode) -> set[str]:
     mod = fn.module
     locals_ = graph.local_types(fn)
     rngs = rng_names(fn)
+    tracers = tracer_names(fn)
     if fn.cls == "ProgramCache" and fn.name in _CACHE_METHODS:
         eff.add(_CACHE_METHODS[fn.name])
+    if fn.cls in ("Tracer", "NullTracer") and fn.name in TRACE_EMITTERS:
+        eff.add("trace-emit")
     commit_exempt = fn.is_ctor or (
         mod.is_core and mod.basename in _COMMIT_OWNERS)
     tracked: dict[str, str] = {} if commit_exempt else _committed_vars(
@@ -193,6 +250,9 @@ def _direct(graph: CallGraph, fn: FuncNode) -> set[str]:
                     eff.add(cache_eff)
                 if f.attr in RNG_CONSUMERS and is_rng_expr(f.value, rngs):
                     eff.add("rng-consume")
+                if f.attr in TRACE_EMITTERS and \
+                        is_tracer_expr(f.value, tracers):
+                    eff.add("trace-emit")
             if _leaf(f) == "instance_key" and any(
                     kw.arg == "fabric" for kw in node.keywords):
                 eff.add("cache-rekey")

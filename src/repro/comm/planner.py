@@ -93,7 +93,7 @@ def plan_circuits(
 
 
 @effects("cache-read", "cache-write", "cache-rekey",
-         "rng-consume")
+         "rng-consume", "trace-emit")
 def plan_circuits_service(
     coflows: list[Coflow],
     fabric: OCSFabric = OCSFabric(),

@@ -22,10 +22,11 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from typing import Any, Iterable, Iterator, Sequence
 
 import numpy as np
+
+from repro.obs.clock import now
 
 from .coflow import Instance, OnlineInstance
 from .scheduler import ALGORITHMS, Schedule, tail_quantile
@@ -134,20 +135,20 @@ def _run_one(payload: tuple) -> SweepRow:
     )
 
     if materialize == "metrics":
-        t0 = time.perf_counter()
+        t0 = now()
         ccts, n_flows = run_fast_metrics(inst, alg, seed=seed, scheduling=sched,
                                          backend=backend, releases=rel)
-        wall = time.perf_counter() - t0
+        wall = now() - t0
         return row_from_ccts(idx, alg, sched, seed, inst.weights, ccts,
                              n_flows, wall)
-    t0 = time.perf_counter()
+    t0 = now()
     if rel is None:
         s = run_fast(inst, alg, seed=seed, scheduling=sched, backend=backend)
     else:
         oinst = OnlineInstance(inst=inst, releases=rel)
         s = run_fast_online(oinst, alg, seed=seed, scheduling=sched,
                             backend=backend)
-    wall = time.perf_counter() - t0
+    wall = now() - t0
     if check == "oracle":
         if rel is None:
             cross_check(inst, alg, seed=seed, scheduling=sched, fast=s,

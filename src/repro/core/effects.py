@@ -30,6 +30,10 @@ Vocabulary (one effect per tracked protocol resource):
 - ``fingerprint-mutate`` — perturbs a fabric-fingerprint input (core up
   masks, per-core ``delta_k``): any path doing this must reach a cache
   purge or re-key before the next program is served (RL301).
+- ``trace-emit``         — emits observability spans/events through a
+  ``repro.obs`` tracer. Purely observational (the tracer never feeds a
+  scheduling decision), but declared so RL305 keeps instrumented entry
+  points honest about where telemetry is produced.
 """
 from __future__ import annotations
 
@@ -49,6 +53,7 @@ EFFECTS: frozenset[str] = frozenset({
     "cache-rekey",
     "watermark",
     "fingerprint-mutate",
+    "trace-emit",
 })
 
 _F = TypeVar("_F", bound=Callable[..., object])

@@ -47,6 +47,7 @@ from .coflow import Coflow, Instance, OnlineInstance, extract_flows
 from .effects import effects
 from .ordering import order_coflows, priority_scores
 from .scheduler import Schedule
+from repro.obs.trace import NULL_TRACER, Tracer
 
 if TYPE_CHECKING:   # runtime import would cycle: fault.py imports engine
     from .fault import FaultApplication, FaultEvent, FaultInjector
@@ -938,6 +939,7 @@ class FabricState:
         track_commits: bool | None = None,
         delta_schedule: bool = True,
         fault_lookback: float = np.inf,
+        tracer: Tracer | None = None,
     ) -> None:
         policy, scheduling = _resolve_algorithm(algorithm, scheduling)
         if scheduling not in INCREMENTAL_SCHEDULINGS:
@@ -957,6 +959,10 @@ class FabricState:
         self.R = float(self.rates.sum())
         self.algorithm = algorithm
         self.scheduling = scheduling
+        #: phase tracer (repro.obs): purely observational — nothing the
+        #: engine computes ever reads it, so NULL_TRACER (the default) and
+        #: a recording tracer yield bit-identical schedules
+        self._tracer: Tracer = NULL_TRACER if tracer is None else tracer
         from .assignment import FlatAssignState
 
         self._assign = FlatAssignState(policy, self.rates, self.delta, self.N,
@@ -1159,7 +1165,7 @@ class FabricState:
         }
 
     @effects("commit-mutate", "fingerprint-mutate", "watermark",
-             "rng-consume")
+             "rng-consume", "trace-emit")
     def apply_fault(self, event: "FaultEvent") -> "FaultApplication":
         """Apply one topology-churn event (see ``core.fault``) right now.
 
@@ -1169,8 +1175,21 @@ class FabricState:
         reassigned, and retracted final CCTs are reported. Returns the
         ``FaultApplication`` record; ``step`` calls this for every injector
         event due at a tick, ``service.FabricManager.report_fault`` for
-        events discovered between ticks.
+        events discovered between ticks. The recovery is recorded as one
+        ``fault/recover`` span carrying the abort/requeue counts.
         """
+        with self._tracer.span("fault/recover") as sp:
+            app = self._apply_fault(event)
+            if sp.live:
+                sp.set(event=type(app.event).__name__,
+                       aborted=app.n_aborted, requeued=app.requeued,
+                       reassigned=app.reassigned_pending,
+                       unfinalized=len(app.unfinalized))
+            return app
+
+    @effects("commit-mutate", "fingerprint-mutate", "watermark",
+             "rng-consume")
+    def _apply_fault(self, event: "FaultEvent") -> "FaultApplication":
         from .fault import (
             FAULT_EVENTS,
             AbortedCircuit,
@@ -1360,7 +1379,7 @@ class FabricState:
         }
 
     @effects("commit-mutate", "fingerprint-mutate", "watermark",
-             "rng-consume")
+             "rng-consume", "trace-emit")
     def step(self, coflows: Sequence[Coflow],
              releases: Annotated[F8, "B"], t_now: float) -> TickCommit:
         """One service tick: admit ``coflows`` (released in
@@ -1400,7 +1419,11 @@ class FabricState:
         t_prev = self.t_now
         n_old = self._pend["gid"].size
         if len(coflows):
-            batch = self._admit(coflows, releases)
+            with self._tracer.span("tick/assign") as sp_as:
+                batch = self._admit(coflows, releases)
+                if sp_as.live:
+                    sp_as.set(coflows=len(coflows),
+                              flows=int(batch["gid"].size))
             pend = {
                 name: np.concatenate([self._pend[name], batch[name]])
                 for name, _dt in _PEND_FIELDS
@@ -1417,11 +1440,14 @@ class FabricState:
         if self.scheduling == "reserving":
             # Reservations commit immediately in arrival order and never
             # move, so the horizon arrays ARE the reservation state.
-            t_est = _reserving_times(
-                rin, rout, pend["srv"],
-                self.delta if dl_f is None else dl_f, n_res,
-                release=pend["rel"], avail_in=self.free_in,
-                avail_out=self.free_out)
+            with self._tracer.span("tick/event_loop") as sp_ev:
+                t_est = _reserving_times(
+                    rin, rout, pend["srv"],
+                    self.delta if dl_f is None else dl_f, n_res,
+                    release=pend["rel"], avail_in=self.free_in,
+                    avail_out=self.free_out)
+                if sp_ev.live:
+                    sp_ev.set(rows=int(t_est.size), reserving=True)
             commit = np.ones(t_est.size, dtype=bool)
         else:
             # Delta-scheduling: tentative times are stable across ticks
@@ -1432,38 +1458,47 @@ class FabricState:
             # So the cached tentative times of untouched components are
             # spliced, and only the touched rows re-run the event loop.
             F = rin.size
-            t_est = np.empty(F)
-            if (self.delta_schedule and self._tent is not None
-                    and self._tent.size == n_old):
-                t_est[:n_old] = self._tent
-                dirty = _touched_rows(rin, rout, n_res, n_old)
-            else:
-                dirty = np.ones(F, dtype=bool)
-            if self.delta_schedule and F:
-                roots = _resource_components(rin, rout, n_res)
-                comp_total = int(np.unique(roots).size)
-                comp_touched = (int(np.unique(roots[dirty]).size)
-                                if dirty.any() else 0)
-            sub = np.nonzero(dirty)[0]
-            self.tent_reused += int(F - sub.size)
-            self.tent_recomputed += int(sub.size)
+            with self._tracer.span("tick/splice") as sp_spl:
+                t_est = np.empty(F)
+                if (self.delta_schedule and self._tent is not None
+                        and self._tent.size == n_old):
+                    t_est[:n_old] = self._tent
+                    dirty = _touched_rows(rin, rout, n_res, n_old)
+                else:
+                    dirty = np.ones(F, dtype=bool)
+                if self.delta_schedule and F:
+                    roots = _resource_components(rin, rout, n_res)
+                    comp_total = int(np.unique(roots).size)
+                    comp_touched = (int(np.unique(roots[dirty]).size)
+                                    if dirty.any() else 0)
+                sub = np.nonzero(dirty)[0]
+                self.tent_reused += int(F - sub.size)
+                self.tent_recomputed += int(sub.size)
+                if sp_spl.live:
+                    sp_spl.set(reused=int(F - sub.size),
+                               recomputed=int(sub.size),
+                               components_total=comp_total,
+                               components_touched=comp_touched)
             if sub.size:
                 # Priority order: WSPT score desc, admission index,
                 # intra-coflow extraction order — the global arrival
                 # pipeline's flow order restricted to the (touched) pending
                 # set; a component's restriction equals the global order's
                 # restriction because components share no resources.
-                perm = np.lexsort((pend["intra"][sub], pend["gid"][sub],
-                                   -pend["score"][sub]))
-                s = sub[perm]
-                te = _event_loop(
-                    rin[s], rout[s], pend["srv"][s], pend["core"][s],
-                    self.delta if dl_f is None else dl_f[s], n_res, self.N,
-                    t0=t_prev,
-                    guard=(self.scheduling == "priority-guard"),
-                    release=pend["rel"][s],
-                    free_in0=self.free_in, free_out0=self.free_out)
-                t_est[s] = te
+                with self._tracer.span("tick/event_loop") as sp_ev:
+                    perm = np.lexsort((pend["intra"][sub], pend["gid"][sub],
+                                       -pend["score"][sub]))
+                    s = sub[perm]
+                    te = _event_loop(
+                        rin[s], rout[s], pend["srv"][s], pend["core"][s],
+                        self.delta if dl_f is None else dl_f[s], n_res,
+                        self.N, t0=t_prev,
+                        guard=(self.scheduling == "priority-guard"),
+                        release=pend["rel"][s],
+                        free_in0=self.free_in, free_out0=self.free_out)
+                    t_est[s] = te
+                    if sp_ev.live:
+                        sp_ev.set(rows=int(sub.size))
             commit = t_est <= t_now
         if dl_f is None:
             tc = (t_est[commit] + self.delta) + pend["srv"][commit]

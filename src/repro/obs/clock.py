@@ -1,0 +1,38 @@
+"""The sanctioned telemetry clock: the repo's ONLY legal wall-time read.
+
+Every schedule in this repo must be a pure function of ``(instance,
+seed)`` — that is what the differential suites (engine vs oracle,
+delta-splice vs full replay) assert bit-exactly, and what reprolint's
+RL103 enforces statically. Telemetry still needs wall time (span
+durations, decision latency, tick wall), so the tension is resolved with
+a single choke point: **this module is the one place scheduling-scope
+and observability code may read a clock**, and reprolint blesses exactly
+the module path ``repro/obs/clock.py``. A ``time.perf_counter()`` (or
+``monotonic()``) call anywhere else under ``core/``, ``service/``,
+``kernels/``, or ``obs/`` is an RL103 finding — the corpus file
+``tests/lint_corpus/rl103_unsanctioned_clock.py`` pins that unsanctioned
+reads still fire, and ``clean_obs_clock.py`` pins that this module's own
+read does not.
+
+Why a choke point instead of scattered ``perf_counter()`` calls:
+
+- auditability — "timing never feeds a scheduling decision" reduces to
+  "no scheduling module imports ``obs.clock`` into a value the engine
+  reads", one grep instead of a whole-tree review;
+- swappability — tests can monkeypatch ``now`` here to get
+  deterministic span durations without touching instrumented code.
+"""
+from __future__ import annotations
+
+import time
+
+__all__ = ["now"]
+
+
+def now() -> float:
+    """Monotonic telemetry timestamp in fractional seconds.
+
+    Suitable only for durations and ordering on one host; never feeds a
+    scheduling decision (RL103 keeps it that way).
+    """
+    return time.perf_counter()

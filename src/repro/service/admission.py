@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.core.coflow import Coflow
 from repro.core.effects import effects
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["ArrivalRequest", "AdmissionPolicy", "BackpressureError",
            "AdmissionQueue"]
@@ -75,7 +76,7 @@ class ArrivalRequest:
 
     coflow: Coflow
     release: float
-    submitted_s: float  # wall-clock (perf_counter) at submission
+    submitted_s: float  # telemetry clock (repro.obs.clock.now) at submission
     score: float = 0.0
     n_flows: int = 0
     deferred: bool = False
@@ -135,19 +136,53 @@ class AdmissionQueue:
     """Bounded FIFO of arrival requests with micro-batch draining."""
 
     def __init__(self, max_depth: int = 1024,
-                 policy: AdmissionPolicy | None = None) -> None:
+                 policy: AdmissionPolicy | None = None,
+                 metrics: MetricsRegistry | None = None) -> None:
         if max_depth < 1:
             raise ValueError("max_depth must be >= 1")
         self.max_depth = int(max_depth)
         self.policy = policy if policy is not None else AdmissionPolicy()
-        self.rejected = 0    # push backpressure (queue full)
-        self.late = 0        # caller-raced releases clamped at admission
-        self.deferred = 0    # flow-budget deferrals (events, not requests)
-        self.shed = 0        # requests moved to standby
-        self.backfilled = 0  # standby requests re-entering the queue
-        self.dropped = 0     # standby overflow: permanently rejected
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        # registry-backed transition counters (read via the properties
+        # below, which keep the pre-registry attribute names)
+        self._rejected = self.metrics.counter("admission.rejected")
+        self._late = self.metrics.counter("admission.late")
+        self._deferred = self.metrics.counter("admission.deferred")
+        self._shed_c = self.metrics.counter("admission.shed")
+        self._backfilled = self.metrics.counter("admission.backfilled")
+        self._dropped = self.metrics.counter("admission.dropped")
         self._q: deque[ArrivalRequest] = deque()
         self._standby: deque[ArrivalRequest] = deque()
+
+    @property
+    def rejected(self) -> int:
+        """Push backpressure (queue full)."""
+        return self._rejected.value
+
+    @property
+    def late(self) -> int:
+        """Caller-raced releases clamped at admission."""
+        return self._late.value
+
+    @property
+    def deferred(self) -> int:
+        """Flow-budget deferrals (events, not requests)."""
+        return self._deferred.value
+
+    @property
+    def shed(self) -> int:
+        """Requests moved to standby."""
+        return self._shed_c.value
+
+    @property
+    def backfilled(self) -> int:
+        """Standby requests re-entering the queue."""
+        return self._backfilled.value
+
+    @property
+    def dropped(self) -> int:
+        """Standby overflow: permanently rejected."""
+        return self._dropped.value
 
     def __len__(self) -> int:
         return len(self._q)
@@ -176,7 +211,7 @@ class AdmissionQueue:
     def push(self, req: ArrivalRequest) -> None:
         """Enqueue, or raise :class:`BackpressureError` when full."""
         if len(self._q) >= self.max_depth:
-            self.rejected += 1
+            self._rejected.inc()
             raise BackpressureError(
                 f"admission queue full ({self.max_depth} pending requests); "
                 f"retry after the next service tick")
@@ -194,7 +229,7 @@ class AdmissionQueue:
         depth bound, like requeue_front. Returns the count recalled."""
         n = len(self._standby)
         if n:
-            self.backfilled += n
+            self._backfilled.inc(n)
             self._q.extend(self._standby)
             self._standby.clear()
         return n
@@ -211,7 +246,7 @@ class AdmissionQueue:
         room = pol.shed_depth - released
         while self._standby and room > 0:
             self._q.append(self._standby.popleft())
-            self.backfilled += 1
+            self._backfilled.inc()
             room -= 1
 
     def _shed(self, keep: deque, t_now: float) -> deque:
@@ -229,7 +264,7 @@ class AdmissionQueue:
         # oldest equal-priority work has waited longest and stays)
         victims = set(sorted(
             released, key=lambda x: (kept[x].score, -x))[:excess])
-        self.shed += excess
+        self._shed_c.inc(excess)
         for x in sorted(victims):
             self._standby.append(
                 dataclasses.replace(kept[x], deferred=True))
@@ -237,7 +272,7 @@ class AdmissionQueue:
         if pol.max_standby is not None:
             while len(self._standby) > pol.max_standby:
                 self._standby.popleft()
-                self.dropped += 1
+                self._dropped.inc()
         return deque(kept)
 
     @effects()
@@ -276,7 +311,7 @@ class AdmissionQueue:
                 keep.append(req)
                 continue
             if budget is not None and req.n_flows > budget:
-                self.deferred += 1
+                self._deferred.inc()
                 if not req.deferred:
                     req = dataclasses.replace(req, deferred=True)
                 keep.append(req)
@@ -285,7 +320,7 @@ class AdmissionQueue:
                 budget -= req.n_flows
             if is_late:
                 if not req.deferred:
-                    self.late += 1
+                    self._late.inc()
                 req = dataclasses.replace(req, release=floor)
             admitted.append(req)
         self._q = self._shed(keep, t_now)

@@ -22,6 +22,8 @@ import numpy as np
 from repro.core.arrays import F8
 from repro.core.coflow import Instance
 from repro.core.effects import effects
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer, current_tracer
 
 __all__ = ["instance_key", "ProgramCache"]
 
@@ -74,27 +76,36 @@ class ProgramCache:
     ``(program, submitted cid order)`` so hits can be re-labeled to the
     caller's coflow ids)."""
 
-    def __init__(self, capacity: int = 128) -> None:
+    def __init__(self, capacity: int = 128, *,
+                 metrics: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None) -> None:
         if capacity < 1:
             raise ValueError("cache capacity must be >= 1")
         self.capacity = int(capacity)
-        self.hits = 0
-        self.misses = 0
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._tracer: Tracer = current_tracer() if tracer is None else tracer
+        self._hits = self.metrics.counter("cache.hits")
+        self._misses = self.metrics.counter("cache.misses")
+        self._purged = self.metrics.counter("cache.purged")
         self._store: OrderedDict[str, object] = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._store)
 
-    @effects("cache-read")
+    @effects("cache-read", "trace-emit")
     def get(self, key: str) -> object | None:
         """Program for ``key``, or None (counts a hit/miss either way)."""
         try:
             val = self._store[key]
         except KeyError:
-            self.misses += 1
+            self._misses.inc()
+            if self._tracer.enabled:
+                self._tracer.event("cache/miss", key=key[:16])
             return None
         self._store.move_to_end(key)
-        self.hits += 1
+        self._hits.inc()
+        if self._tracer.enabled:
+            self._tracer.event("cache/hit", key=key[:16])
         return val
 
     @effects("cache-write")
@@ -104,7 +115,7 @@ class ProgramCache:
         while len(self._store) > self.capacity:
             self._store.popitem(last=False)
 
-    @effects("cache-purge")
+    @effects("cache-purge", "trace-emit")
     def invalidate(self, pred: Callable[[object], bool]) -> int:
         """Drop every entry whose value satisfies ``pred``; returns the
         count. The fault path uses this to purge programs that matched
@@ -113,7 +124,25 @@ class ProgramCache:
         doomed = [k for k, v in self._store.items() if pred(v)]
         for k in doomed:
             del self._store[k]
+        if doomed:
+            self._purged.inc(len(doomed))
+            if self._tracer.enabled:
+                self._tracer.event("cache/purge", count=len(doomed))
         return len(doomed)
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def purged(self) -> int:
+        """Total entries dropped by :meth:`invalidate` over this cache's
+        lifetime (the fault plane's churn, visible without a trace)."""
+        return self._purged.value
 
     @property
     def hit_rate(self) -> float:

@@ -26,7 +26,6 @@ Every emitted program can be round-tripped through the independent referee
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import TYPE_CHECKING, Annotated, Sequence
 
@@ -42,6 +41,9 @@ from repro.core.engine import (
     run_fast,
     run_fast_online,
 )
+from repro.obs.clock import now
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer, current_tracer
 
 from .admission import (
     AdmissionPolicy,
@@ -147,12 +149,18 @@ class FaultReport:
 class FabricManager:
     """Streaming coflow admission -> incremental scheduling -> programs."""
 
-    def __init__(self, config: FabricConfig = FabricConfig()) -> None:
+    def __init__(self, config: FabricConfig = FabricConfig(), *,
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None) -> None:
         if config.scheduling not in INCREMENTAL_SCHEDULINGS:
             raise ValueError(
                 f"service scheduling must be incremental "
                 f"({INCREMENTAL_SCHEDULINGS}), got {config.scheduling!r}")
         self.config = config
+        # one shared observability plane: the engine, queue, and cache all
+        # record into this manager's tracer + registry
+        self._tracer: Tracer = current_tracer() if tracer is None else tracer
+        self.metrics = MetricsRegistry() if metrics is None else metrics
         # commit tracking is always on for a managed fabric: report_fault
         # must be able to classify committed circuits at any moment
         self.state = FabricState(
@@ -161,24 +169,35 @@ class FabricManager:
             scheduling=config.scheduling, seed=config.seed,
             faults=config.faults, track_commits=True,
             delta_schedule=config.delta_schedule,
-            fault_lookback=config.fault_lookback)
+            fault_lookback=config.fault_lookback,
+            tracer=self._tracer)
         self.fault_reports: list[FaultReport] = []
         self.queue = AdmissionQueue(max_depth=config.max_queue_depth,
-                                    policy=config.admission)
-        self.cache = ProgramCache(capacity=config.cache_capacity)
+                                    policy=config.admission,
+                                    metrics=self.metrics)
+        self.cache = ProgramCache(capacity=config.cache_capacity,
+                                  metrics=self.metrics, tracer=self._tracer)
         self.reports: "deque[TickReport]" = deque(
             maxlen=config.max_history_ticks)
-        self.latencies_s: "deque[float]" = deque(
-            maxlen=config.max_latency_samples)
         self._submitted_s: dict[int, float] = {}  # gid -> submit wall-clock
         # running counters (exact regardless of history trimming); per-coflow
         # results live in FabricState's registry (ccts()/weights() by gid)
-        self._n_finalized = 0
-        self._n_ticks = 0
-        self._flows_committed = 0
-        self._tick_wall_s = 0.0
-        self._depth_max = 0
-        self._depth_sum = 0.0
+        self._c_finalized = self.metrics.counter("service.finalized")
+        self._c_ticks = self.metrics.counter("service.ticks")
+        self._c_flows = self.metrics.counter("service.flows_committed")
+        self._g_depth_max = self.metrics.gauge("service.queue_depth_max")
+        self._g_depth_sum = self.metrics.gauge("service.queue_depth_sum")
+        # per-tick wall + per-coflow decision latency; the histogram window
+        # truncates samples but counts every observation, so summary() can
+        # report honest window coverage for its percentiles
+        self._h_tick_wall = self.metrics.histogram("service.tick_wall_s")
+        self._h_latency = self.metrics.histogram(
+            "service.decision_latency_s", window=config.max_latency_samples)
+
+    @property
+    def latencies_s(self) -> "deque[float]":
+        """Retained decision-latency samples (the histogram's window)."""
+        return self._h_latency.samples
 
     # -- streaming plane ---------------------------------------------------
     def submit(self, coflow: Coflow, release: float) -> None:
@@ -203,11 +222,11 @@ class FabricManager:
                 delta=self.config.delta))[0])
         self.queue.push(ArrivalRequest(
             coflow=coflow, release=float(release),
-            submitted_s=time.perf_counter(),
+            submitted_s=now(),
             score=score, n_flows=coflow.num_flows))
 
     @effects("fingerprint-mutate", "watermark", "cache-purge",
-             "rng-consume")
+             "rng-consume", "trace-emit")
     def tick(self, t_now: float) -> TickReport:
         """One service tick at stream time ``t_now``: drain the admission
         queue (under the admission policy's flow budget), schedule pending
@@ -224,59 +243,88 @@ class FabricManager:
         return max(0, cap.max_pending_flows - self.state.n_pending_flows)
 
     def _tick(self, t_now: float, *, capped: bool) -> TickReport:
-        t0 = time.perf_counter()
-        q = self.queue
-        before = (q.deferred, q.shed, q.backfilled)
-        admitted = q.drain(t_now, self.state.commit_floor,
-                           flow_budget=self._flow_budget() if capped
-                           else None)
-        gid0 = self.state.n_coflows
-        try:
-            commit = self.state.step(
-                [r.coflow for r in admitted],
-                np.array([r.release for r in admitted], dtype=np.float64),
-                t_now)
-        except Exception:
-            # the batch was rejected whole — put the drained requests back
-            # (front, original order) instead of silently losing them
-            self.queue.requeue_front(admitted)
-            raise
-        for off, r in enumerate(admitted):
-            self._submitted_s[gid0 + off] = r.submitted_s
-        for app in commit.faults:  # scripted churn applied at this tick
-            self._register_fault(app)
-        program = compile_commit(commit, self.state.rates, self.state.delta,
-                                 self.state.N)
-        if self.config.validate_every_tick:
-            program.validate()
-        end = time.perf_counter()
-        self._n_finalized += len(commit.finalized)
-        for fin in commit.finalized:
-            # a fault-retracted coflow re-finalizing here has no pending
-            # submission stamp (popped at its first finalization) — skip the
-            # sample rather than record a bogus 0.0 latency
-            sub = self._submitted_s.pop(fin[0], None)
-            if sub is not None:
-                self.latencies_s.append(end - sub)
-        report = TickReport(
-            t_now=float(t_now), admitted=len(admitted),
-            committed_flows=commit.n_flows, finalized=len(commit.finalized),
-            pending_flows=commit.n_pending, queue_depth=self.queue.depth,
-            wall_s=end - t0, program=program,
-            aborted=sum(app.n_aborted for app in commit.faults),
-            unfinalized=len(commit.unfinalized),
-            deferred=q.deferred - before[0], shed=q.shed - before[1],
-            backfilled=q.backfilled - before[2],
-            standby_depth=q.standby_depth,
-            components_total=commit.components_total,
-            components_touched=commit.components_touched)
-        self.reports.append(report)
-        self._n_ticks += 1
-        self._flows_committed += commit.n_flows
-        self._tick_wall_s += report.wall_s
-        self._depth_max = max(self._depth_max, report.queue_depth)
-        self._depth_sum += report.queue_depth
-        return report
+        tracer = self._tracer
+        with tracer.span("tick") as tick_sp:
+            t0 = now()
+            q = self.queue
+            before = (q.deferred, q.shed, q.backfilled)
+            with tracer.span("tick/admit") as admit_sp:
+                admitted = q.drain(t_now, self.state.commit_floor,
+                                   flow_budget=self._flow_budget() if capped
+                                   else None)
+                if admit_sp.live:
+                    admit_sp.set(admitted=len(admitted),
+                                 queue_depth=q.depth)
+            gid0 = self.state.n_coflows
+            try:
+                commit = self.state.step(
+                    [r.coflow for r in admitted],
+                    np.array([r.release for r in admitted],
+                             dtype=np.float64),
+                    t_now)
+            except Exception:
+                # the batch was rejected whole — put the drained requests
+                # back (front, original order) instead of silently losing
+                # them
+                self.queue.requeue_front(admitted)
+                raise
+            for off, r in enumerate(admitted):
+                self._submitted_s[gid0 + off] = r.submitted_s
+            for app in commit.faults:  # scripted churn applied at this tick
+                self._register_fault(app)
+            with tracer.span("tick/program_emit") as emit_sp:
+                program = compile_commit(commit, self.state.rates,
+                                         self.state.delta, self.state.N)
+                if self.config.validate_every_tick:
+                    program.validate()
+                if emit_sp.live:
+                    emit_sp.set(segments=len(program.core),
+                                validated=self.config.validate_every_tick)
+            end = now()
+            self._c_finalized.inc(len(commit.finalized))
+            for fin in commit.finalized:
+                # a fault-retracted coflow re-finalizing here has no pending
+                # submission stamp (popped at its first finalization) — skip
+                # the sample rather than record a bogus 0.0 latency
+                sub = self._submitted_s.pop(fin[0], None)
+                if sub is not None:
+                    self._h_latency.observe(end - sub)
+            report = TickReport(
+                t_now=float(t_now), admitted=len(admitted),
+                committed_flows=commit.n_flows,
+                finalized=len(commit.finalized),
+                pending_flows=commit.n_pending, queue_depth=self.queue.depth,
+                wall_s=end - t0, program=program,
+                aborted=sum(app.n_aborted for app in commit.faults),
+                unfinalized=len(commit.unfinalized),
+                deferred=q.deferred - before[0], shed=q.shed - before[1],
+                backfilled=q.backfilled - before[2],
+                standby_depth=q.standby_depth,
+                components_total=commit.components_total,
+                components_touched=commit.components_touched)
+            self.reports.append(report)
+            self._c_ticks.inc()
+            self._c_flows.inc(commit.n_flows)
+            self._h_tick_wall.observe(report.wall_s)
+            self._g_depth_max.set(max(self._g_depth_max.value,
+                                      report.queue_depth))
+            self._g_depth_sum.set(self._g_depth_sum.value
+                                  + report.queue_depth)
+            if tick_sp.live:
+                up = self.state.core_up
+                reuse_den = commit.components_total
+                tick_sp.set(
+                    tick=self._c_ticks.value, t_now=float(t_now),
+                    admitted=len(admitted), flows=commit.n_flows,
+                    finalized=len(commit.finalized),
+                    pending_flows=commit.n_pending,
+                    components_touched=commit.components_touched,
+                    components_total=commit.components_total,
+                    tent_reuse_fraction=(
+                        1.0 - commit.components_touched / reuse_den
+                        if reuse_den else 0.0),
+                    core_mask="".join("1" if u else "0" for u in up))
+            return report
 
     def flush(self) -> TickReport:
         """End-of-stream: commit everything still pending, queued, or shed.
@@ -295,7 +343,7 @@ class FabricManager:
         return self._tick(np.inf, capped=False)
 
     # -- fault plane --------------------------------------------------------
-    @effects("cache-purge")
+    @effects("cache-purge", "trace-emit")
     def _register_fault(self, app: "FaultApplication") -> FaultReport:
         """Turn one ``FaultApplication`` into its corrective actions: emit
         teardown events for every aborted circuit, retract retracted final
@@ -303,7 +351,7 @@ class FabricManager:
         matched circuits through a failed core."""
         from repro.core.fault import CoreDown
 
-        self._n_finalized -= len(app.unfinalized)
+        self._c_finalized.inc(-len(app.unfinalized))
         teardowns = tuple(
             CircuitEvent(t=float(a.t_abort), core=a.core, kind="teardown",
                          ingress=a.i, egress=a.j, cid=a.gid)
@@ -322,7 +370,7 @@ class FabricManager:
         return report
 
     @effects("fingerprint-mutate", "watermark", "cache-purge",
-             "rng-consume")
+             "rng-consume", "trace-emit")
     def report_fault(self, event: "FaultEvent") -> FaultReport:
         """Apply one topology-churn event (``core.fault``) right now.
 
@@ -353,7 +401,7 @@ class FabricManager:
 
     # -- one-shot plane ----------------------------------------------------
     @effects("cache-read", "cache-write", "cache-rekey",
-             "rng-consume")
+             "rng-consume", "trace-emit")
     def schedule_instance(
         self,
         inst: Instance | OnlineInstance,
@@ -461,25 +509,35 @@ class FabricManager:
     def summary(self) -> dict:
         """Service-level metrics for dashboards / the load harness.
 
-        Counters are maintained incrementally, so they stay exact even when
-        ``max_history_ticks`` bounds the retained tick reports; the latency
-        percentiles cover the ``max_latency_samples`` most recent coflows.
+        A flat compatibility view over the manager's
+        :class:`~repro.obs.metrics.MetricsRegistry`: counters are
+        maintained incrementally, so they stay exact even when
+        ``max_history_ticks`` bounds the retained tick reports. The latency
+        percentiles cover the ``max_latency_samples`` most recent coflows —
+        the ``latency_samples_*``/``latency_window_coverage`` keys say
+        exactly how much of the observed population that window retains, so
+        a truncated p99 is never silently presented as exact.
         """
-        lat = np.asarray(self.latencies_s, dtype=np.float64)
-        total_wall = self._tick_wall_s
+        lat_h = self._h_latency
+        n_finalized = self._c_finalized.value
+        n_ticks = self._c_ticks.value
+        total_wall = self._h_tick_wall.total
         return {
             "coflows_admitted": self.state.n_coflows,
-            "coflows_finalized": self._n_finalized,
-            "flows_committed": self._flows_committed,
-            "ticks": self._n_ticks,
+            "coflows_finalized": n_finalized,
+            "flows_committed": self._c_flows.value,
+            "ticks": n_ticks,
             "total_tick_wall_s": total_wall,
-            "coflows_per_s": (self._n_finalized / total_wall
+            "coflows_per_s": (n_finalized / total_wall
                               if total_wall > 0 else 0.0),
-            "decision_latency_p50_s": float(np.quantile(lat, 0.50)) if lat.size else 0.0,
-            "decision_latency_p99_s": float(np.quantile(lat, 0.99)) if lat.size else 0.0,
-            "queue_depth_max": self._depth_max,
-            "queue_depth_mean": (self._depth_sum / self._n_ticks
-                                 if self._n_ticks else 0.0),
+            "decision_latency_p50_s": lat_h.quantile(0.50),
+            "decision_latency_p99_s": lat_h.quantile(0.99),
+            "latency_samples_retained": lat_h.n_retained,
+            "latency_samples_observed": lat_h.n_observed,
+            "latency_window_coverage": lat_h.coverage,
+            "queue_depth_max": int(self._g_depth_max.value),
+            "queue_depth_mean": (self._g_depth_sum.value / n_ticks
+                                 if n_ticks else 0.0),
             "rejected": self.queue.rejected,
             "late_arrivals": self.queue.late,
             # overload-policy accounting (exact; see admission.py):

@@ -1,0 +1,7 @@
+"""The sanctioned boundary: repro/obs/clock.py itself may read the clock."""
+# reprolint: pretend-path=src/repro/obs/clock.py
+import time
+
+
+def now() -> float:
+    return time.perf_counter()

@@ -1,0 +1,9 @@
+"""RL103 v2: telemetry clocks outside the sanctioned repro/obs/clock.py."""
+# reprolint: pretend-path=src/repro/obs/fake_timer.py
+import time
+
+
+def span_duration() -> float:
+    t0 = time.perf_counter()
+    t1 = time.monotonic()
+    return t1 - t0

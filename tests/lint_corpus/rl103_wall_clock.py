@@ -7,5 +7,5 @@ from datetime import datetime
 def deadline() -> float:
     now = time.time()
     stamp = datetime.now()
-    ok = time.perf_counter()   # telemetry clock: not a finding
+    ok = time.perf_counter()   # RL103 v2: only repro/obs/clock.py may
     return now + ok + stamp.timestamp()

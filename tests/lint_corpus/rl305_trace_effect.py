@@ -1,0 +1,21 @@
+"""RL305: instrumented entry points must declare ``trace-emit``."""
+# reprolint: pretend-path=src/repro/service/fake_traced.py
+from repro.core.effects import effects
+from repro.obs.trace import Tracer
+
+
+@effects()
+def claims_pure(tracer: Tracer) -> None:
+    with tracer.span("tick"):
+        pass
+
+
+@effects("trace-emit")
+def honest(tracer: Tracer) -> None:
+    tracer.event("cache/hit")
+
+
+@effects("trace-emit")
+def honest_attr_alias(obj: object) -> None:
+    tr = obj._tracer
+    tr.span("tick/admit")

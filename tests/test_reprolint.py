@@ -46,7 +46,10 @@ CORPUS_EXPECT = {
         (6, "unseeded-rng"), (7, "unseeded-rng"),
     ],
     "rl103_wall_clock.py": [
-        (8, "wall-clock"), (9, "wall-clock"),
+        (8, "wall-clock"), (9, "wall-clock"), (10, "wall-clock"),
+    ],
+    "rl103_unsanctioned_clock.py": [
+        (7, "wall-clock"), (8, "wall-clock"),
     ],
     "rl104_set_iteration.py": [
         (8, "unordered-iteration"), (10, "unordered-iteration"),
@@ -94,6 +97,9 @@ CORPUS_EXPECT = {
         (8, "effect-mismatch"), (13, "effect-mismatch"),
         (23, "effect-mismatch"),
     ],
+    "rl305_trace_effect.py": [
+        (8, "effect-mismatch"),
+    ],
 }
 
 
@@ -112,6 +118,14 @@ def test_every_checker_rule_has_a_corpus_offender():
     # parse-error is the loader's own rule; everything else must be
     # exercised by the golden corpus.
     assert covered == set(RULES) - {"parse-error"}
+
+
+def test_sanctioned_clock_module_is_clean():
+    # RL103 v2: ``repro/obs/clock.py`` is the one module allowed to read
+    # the perf clock; the same source anywhere else is an offender
+    # (see rl103_unsanctioned_clock.py).
+    report = corpus_findings("clean_obs_clock.py")
+    assert report.ok, "\n".join(f.render() for f in report.findings)
 
 
 def test_justified_suppression_silences_and_is_counted():
@@ -170,8 +184,10 @@ def test_cli_exit_codes_and_json(tmp_path):
     assert proto["declared"] >= 14
     assert set(proto["effects"]) == {
         "cache-purge", "cache-read", "cache-rekey", "cache-write",
-        "commit-mutate", "fingerprint-mutate", "rng-consume", "watermark"}
+        "commit-mutate", "fingerprint-mutate", "rng-consume",
+        "trace-emit", "watermark"}
     assert proto["effects"]["cache-purge"] > 0
+    assert proto["effects"]["trace-emit"] > 0
 
     bad = _run_cli("--json", str(out),
                    str(CORPUS / "rl101_global_rng.py"))
