@@ -21,8 +21,10 @@ fraction. Two hard checks:
 
   - **bounded p99 under sustained 2x overload**: the p99 per-tick wall over
     the last third of the stream must stay within ``P99_GROWTH_CEILING`` of
-    the first third's — the policy caps per-tick work, so tick cost must
-    not grow with stream position (without the policy it grows linearly);
+    the MIDDLE third's — the policy caps per-tick work, so tick cost must
+    plateau once the flow cap binds (without the policy it grows linearly
+    with stream position). The first third is the backlog ramp-up, so the
+    first-vs-last ratio is reported but not gated;
   - **exact conservation**: every submitted coflow is admitted + finalized,
     or rejected/dropped with its counter incremented — nothing vanishes.
 
@@ -30,6 +32,30 @@ A same-stream pass with ``delta_schedule=False`` (full tentative replay per
 tick) must produce bit-identical CCTs — the service-level delta-vs-full
 differential — and its wall ratio is reported as the delta-scheduling
 speedup.
+
+A third pass per load runs **locality mode**
+(``FabricConfig(locality=LOCALITY)``): within each tick's arrival batch
+the tau-aware assignment pays an affinity penalty on cores the batch has
+not used yet, so arrivals cluster on few cores and the other cores'
+resource components — which never span cores — go untouched, which is
+exactly what the delta-splice reuses. Locality changes schedules, so it
+is NOT gated by bit-exactness: the gate is the referee
+(``validate_every_tick=True`` replays every emitted tick program through
+``simulator.validate``) plus a weighted-CCT comparison against the
+default assignment and the p99 growth bound. Because single-seed wCCT at
+saturation is tie-break-noise-dominated (one seed can swing +/-10% with
+a vanishing penalty), the saturated row measures the locality block over
+``WCCT_SEEDS`` independent arrival draws and gates the MEAN ratio:
+reuse >= ``REUSE_FLOOR`` and wCCT tax <= ``WCCT_CEILING``. The ceiling
+is calibrated, not aspirational: an 8-seed mechanism sweep (EXPERIMENTS
+§Saturation) puts the clustering tax at ~11% mean at bench scale and
+~28% at the small CI fabric — concentrating a batch on few cores
+serializes it, and at saturation that cost is structural, the price of
+the splice reuse it buys. Per-mode component-size histograms and the
+histogram restricted to reused (spliced) components localize *where* the
+splice pays — the committed reuse floor for the 2.0x row lives in
+``benchmarks/baselines/FLOORS.json`` and is enforced by the
+``diff-bench --floors`` CI step.
 """
 from __future__ import annotations
 
@@ -51,17 +77,32 @@ DELTA = 8.0
 P99_GROWTH_CEILING = 3.0
 P99_ABS_SLACK_S = 2e-3
 
+#: locality-mode gates at the saturated (>= 2x) row, on means over
+#: ``WCCT_SEEDS`` arrival draws: the splice-reuse fraction must clear the
+#: floor and the weighted-CCT tax must stay under the ceiling (measured
+#: mean ~1.12 at bench scale, ~1.28 at the N=20 CI fabric; per-seed
+#: ratios land anywhere in ~[1.0, 1.4], so only the mean is gateable)
+REUSE_FLOOR = 0.40
+WCCT_CEILING = 1.40
+WCCT_SEEDS = 3
+#: default affinity-penalty strength for the locality pass (in units of
+#: the reconfiguration delay; see ``assignment.FlatAssignState``) —
+#: picked from the sweep as the best reuse-per-tax operating point
+LOCALITY = 16.0
+
 
 def run_overload(oinst: OnlineInstance, n_ticks: int,
                  policy: AdmissionPolicy | None,
-                 delta_schedule: bool = True) -> dict:
+                 delta_schedule: bool = True, locality: float = 0.0,
+                 validate: bool = False) -> dict:
     """Stream the instance through a policy-capped service; returns summary
     plus the per-tick wall series and exact accounting."""
     inst = oinst.inst
     mgr = FabricManager(FabricConfig(
         rates=tuple(inst.rates), delta=inst.delta, N=inst.N,
         max_queue_depth=max(64, 4 * inst.M), admission=policy,
-        delta_schedule=delta_schedule))
+        delta_schedule=delta_schedule, locality=locality,
+        validate_every_tick=validate))
     order = np.argsort(oinst.releases, kind="stable")
     rel = oinst.releases
     nxt = 0
@@ -102,6 +143,7 @@ def run_overload(oinst: OnlineInstance, n_ticks: int,
         assert out["pending_max"] <= cap, (
             f"flow budget violated: backlog {out['pending_max']} > cap {cap}")
     out["_ccts"] = np.sort(mgr.ccts())
+    out["wcct"] = float(np.dot(mgr.state.weights(), mgr.ccts()))
     return out
 
 
@@ -109,15 +151,26 @@ def _p99(walls: np.ndarray) -> float:
     return float(np.quantile(walls, 0.99)) if walls.size else 0.0
 
 
-def p99_growth(walls: list, n_stream_ticks: int) -> tuple[float, float, bool]:
-    """(first-third p99, last-third p99, bounded?) over the streamed ticks
-    (the flush ticks commit the policy's deferred tail and are excluded —
-    they are end-of-stream drain, not steady-state overload)."""
+def p99_growth(walls: list, n_stream_ticks: int
+               ) -> tuple[float, float, float, bool]:
+    """(first-third p99, mid-third p99, last-third p99, bounded?) over the
+    streamed ticks (the flush ticks commit the policy's deferred tail and
+    are excluded — they are end-of-stream drain, not steady-state
+    overload).
+
+    The bound compares the LAST third against the MIDDLE third: the first
+    third is the backlog ramp-up (arrivals still filling toward the flow
+    cap, ticks legitimately cheap), so first-vs-last measures workload
+    shape, not policy failure — it is reported, never gated. Once the cap
+    binds (mid-stream), per-tick work must plateau: last-vs-mid growth
+    past the ceiling means the policy failed to bound work.
+    """
     w = np.asarray(walls[:n_stream_ticks], dtype=np.float64)
     third = max(1, w.size // 3)
-    first, last = _p99(w[:third]), _p99(w[-third:])
-    bounded = last <= P99_GROWTH_CEILING * first + P99_ABS_SLACK_S
-    return first, last, bounded
+    first, mid, last = _p99(w[:third]), _p99(w[third:2 * third]), \
+        _p99(w[-third:])
+    bounded = last <= P99_GROWTH_CEILING * mid + P99_ABS_SLACK_S
+    return first, mid, last, bounded
 
 
 def main(N: int = 24, M: int = 300, n_ticks: int = 30,
@@ -143,7 +196,8 @@ def main(N: int = 24, M: int = 300, n_ticks: int = 30,
           f"resume@{policy.resume_depth}")
     print(f"{'load':>6s} {'p99 tick ms':>12s} {'growth':>8s} "
           f"{'lat p99 ms':>11s} {'backlog':>8s} {'defer':>6s} {'shed':>6s} "
-          f"{'backfill':>9s} {'reuse%':>7s} {'dx':>6s}")
+          f"{'backfill':>9s} {'reuse%':>7s} {'dx':>6s} "
+          f"{'loc reuse%':>10s} {'wcct':>7s} {'loc p99':>8s}")
     rows = []
     for load in loads:
         span = mk / load
@@ -155,48 +209,141 @@ def main(N: int = 24, M: int = 300, n_ticks: int = 30,
         ref = run_overload(oi, n_ticks, policy, delta_schedule=False)
         assert np.array_equal(res.pop("_ccts"), ref.pop("_ccts")), \
             f"delta-scheduling CCT divergence at load {load}"
+        # locality mode: schedules differ by design, so the gates are the
+        # per-tick referee (validate=True), the weighted-CCT band, and a
+        # p99 that must not regress past the default run's
+        loc = run_overload(oi, n_ticks, policy, delta_schedule=True,
+                           locality=LOCALITY, validate=True)
+        loc.pop("_ccts")
         dx_speedup = ref["wall_s"] / max(res["wall_s"], 1e-12)
-        first, last, bounded = p99_growth(res["tick_walls_s"], n_ticks)
+        first, mid, last, bounded = p99_growth(res["tick_walls_s"], n_ticks)
+        l_first, l_mid, l_last, l_bounded = p99_growth(loc["tick_walls_s"],
+                                                       n_ticks)
         reuse = res["tent_reused"] / max(
             1, res["tent_reused"] + res["tent_recomputed"])
+        loc_reuse = loc["tent_reused"] / max(
+            1, loc["tent_reused"] + loc["tent_recomputed"])
+        wcct_ratio = loc["wcct"] / max(res["wcct"], 1e-12)
+        # saturated row: single-seed wCCT is tie-break-noise-dominated, so
+        # re-measure the default/locality pair over extra arrival draws
+        # and gate the means (the referee still runs on every draw)
+        ratio_seeds, reuse_seeds = [wcct_ratio], [loc_reuse]
+        if load >= 2.0:
+            for s2 in range(seed + 1, seed + WCCT_SEEDS):
+                off2 = sample_online_instance(trace, N=N, M=M, rates=RATES,
+                                              delta=DELTA, span=0.0, seed=s2)
+                mk2 = float(run_fast_online(off2, "ours").ccts.max())
+                oi2 = sample_online_instance(trace, N=N, M=M, rates=RATES,
+                                             delta=DELTA, span=mk2 / load,
+                                             seed=s2)
+                # the flow cap must track THIS draw's offered work, as the
+                # primary seed's does — a mis-sized cap distorts shedding
+                # and with it the clustering tax
+                tf2 = sum(c.num_flows for c in off2.inst.coflows)
+                policy2 = AdmissionPolicy(
+                    max_pending_flows=max(128, tf2 // 8),
+                    shed_depth=policy.shed_depth,
+                    resume_depth=policy.resume_depth,
+                    max_standby=None)
+                res2 = run_overload(oi2, n_ticks, policy2,
+                                    delta_schedule=True)
+                loc2 = run_overload(oi2, n_ticks, policy2,
+                                    delta_schedule=True, locality=LOCALITY,
+                                    validate=True)
+                ratio_seeds.append(
+                    loc2["wcct"] / max(res2["wcct"], 1e-12))
+                reuse_seeds.append(loc2["tent_reused"] / max(
+                    1, loc2["tent_reused"] + loc2["tent_recomputed"]))
         row = {
             "load": load,
             "span": span,
             "tick_p99_first_third_s": first,
+            "tick_p99_mid_third_s": mid,
             "tick_p99_last_third_s": last,
+            # ramp ratio (reported): cheap fill-up ticks vs steady state
             "p99_growth": last / max(first, 1e-12),
+            # gated ratio: steady-state growth once the flow cap binds
+            "p99_growth_steady": last / max(mid, 1e-12),
             "p99_bounded": bool(bounded),
             "latency_p99_ms": res["decision_latency_p99_s"] * 1e3,
             "backlog_max_flows": res["pending_max"],
             "deferred": res["deferred"],
+            "deferred_flows": res["deferred_flows"],
             "shed": res["shed"],
             "backfilled": res["backfilled"],
             "dropped": res["dropped"],
             "rejected": res["rejected"],
             "tent_reuse_frac": reuse,
+            "tent_invalidated": res["tent_invalidated"],
+            "component_size_hist": res["component_size_hist"],
+            "component_reused_hist": res["component_reused_hist"],
             "delta_speedup": dx_speedup,
             "wall_s": res["wall_s"],
             "full_replay_wall_s": ref["wall_s"],
+            # locality-mode block (same stream, locality=LOCALITY)
+            "locality": LOCALITY,
+            "tent_reuse_frac_locality": loc_reuse,
+            "loc_reuse_seeds": reuse_seeds,
+            "loc_reuse_mean": float(np.mean(reuse_seeds)),
+            "wcct_default": res["wcct"],
+            "wcct_locality": loc["wcct"],
+            "wcct_ratio": wcct_ratio,
+            "wcct_ratio_seeds": ratio_seeds,
+            "wcct_ratio_mean": float(np.mean(ratio_seeds)),
+            "loc_tick_p99_last_third_s": l_last,
+            "loc_p99_growth": l_last / max(l_first, 1e-12),
+            "loc_p99_growth_steady": l_last / max(l_mid, 1e-12),
+            "loc_p99_bounded": bool(l_bounded),
+            "loc_tent_invalidated": loc["tent_invalidated"],
+            "loc_component_size_hist": loc["component_size_hist"],
+            "loc_component_reused_hist": loc["component_reused_hist"],
+            "loc_wall_s": loc["wall_s"],
         }
         rows.append(row)
         print(f"{load:6.2f} {last * 1e3:12.2f} {row['p99_growth']:7.2f}x "
               f"{row['latency_p99_ms']:11.1f} {row['backlog_max_flows']:8d} "
               f"{row['deferred']:6d} {row['shed']:6d} "
               f"{row['backfilled']:9d} {reuse * 100:6.1f}% "
-              f"{dx_speedup:5.1f}x")
+              f"{dx_speedup:5.1f}x {loc_reuse * 100:9.1f}% "
+              f"{wcct_ratio:6.3f} {l_last * 1e3:7.2f}")
     worst = max((r for r in rows if r["load"] >= 2.0),
-                key=lambda r: r["p99_growth"], default=None)
+                key=lambda r: r["p99_growth_steady"], default=None)
     if worst is not None:
         print(f"sustained {worst['load']:.0f}x overload: p99 tick wall "
-              f"{worst['tick_p99_last_third_s']*1e3:.2f}ms, growth "
-              f"{worst['p99_growth']:.2f}x (ceiling "
-              f"{P99_GROWTH_CEILING:.0f}x): "
+              f"{worst['tick_p99_last_third_s']*1e3:.2f}ms, steady growth "
+              f"{worst['p99_growth_steady']:.2f}x (ceiling "
+              f"{P99_GROWTH_CEILING:.0f}x; ramp "
+              f"{worst['p99_growth']:.2f}x): "
               f"{'BOUNDED' if worst['p99_bounded'] else 'UNBOUNDED'}")
         if check_bounded:
             assert worst["p99_bounded"], (
-                f"p99 per-tick wall grew {worst['p99_growth']:.2f}x under "
+                f"steady-state p99 per-tick wall grew "
+                f"{worst['p99_growth_steady']:.2f}x under "
                 f"{worst['load']:.0f}x overload — the admission policy "
                 f"failed to bound per-tick work")
+        print(f"locality={LOCALITY:g}: reuse "
+              f"{worst['tent_reuse_frac']*100:.1f}% -> "
+              f"{worst['loc_reuse_mean']*100:.1f}% "
+              f"(floor {REUSE_FLOOR:.0%}), wCCT ratio mean "
+              f"{worst['wcct_ratio_mean']:.3f} over "
+              f"{len(worst['wcct_ratio_seeds'])} seeds (ceiling "
+              f"{WCCT_CEILING:.2f}), p99 "
+              f"{worst['tick_p99_last_third_s']*1e3:.2f} -> "
+              f"{worst['loc_tick_p99_last_third_s']*1e3:.2f}ms")
+        if check_bounded:
+            assert worst["loc_reuse_mean"] >= REUSE_FLOOR, (
+                f"locality mode reuse mean "
+                f"{worst['loc_reuse_mean']:.1%} fell below the "
+                f"{REUSE_FLOOR:.0%} floor at {worst['load']:.0f}x load "
+                f"— the affinity bias stopped paying")
+            assert worst["wcct_ratio_mean"] <= WCCT_CEILING, (
+                f"locality mode weighted-CCT tax mean "
+                f"{worst['wcct_ratio_mean']:.3f} exceeded the "
+                f"{WCCT_CEILING:.2f} ceiling at {worst['load']:.0f}x load "
+                f"— lower LOCALITY")
+            assert worst["loc_p99_bounded"], (
+                f"locality mode broke the p99 growth bound at "
+                f"{worst['load']:.0f}x load")
     return {"N": N, "M": M, "n_ticks": n_ticks, "offline_makespan": mk,
             "total_flows": total_flows,
             "policy": {
@@ -205,6 +352,10 @@ def main(N: int = 24, M: int = 300, n_ticks: int = 30,
                 "resume_depth": policy.resume_depth,
             },
             "p99_growth_ceiling": P99_GROWTH_CEILING,
+            "locality": LOCALITY,
+            "reuse_floor": REUSE_FLOOR,
+            "wcct_ceiling": WCCT_CEILING,
+            "wcct_seeds": WCCT_SEEDS,
             "rows": rows}
 
 

@@ -24,8 +24,9 @@ that assumption a static property:
   blessed exact-float oracle modules (``circuit_scheduler``/``online``,
   whose docstrings define the convention).
 - ``commit-mutation`` (RL106): in-place mutation of committed
-  ``FlowTable``/``FlatAssignState`` arrays outside their owning module
-  breaks the immutability the tick-commit rule relies on.
+  ``FlowTable``/``FlatAssignState``/``ComponentIndex`` arrays outside
+  their owning module breaks the immutability the tick-commit rule (and
+  the index's partition-exactness contract) relies on.
 """
 from __future__ import annotations
 
@@ -50,7 +51,8 @@ _PERF_CLOCK = {"time.perf_counter", "time.perf_counter_ns",
                "time.monotonic", "time.monotonic_ns"}
 _SANCTIONED_CLOCK_MODULE = "repro/obs/clock.py"
 # committed-state class -> its owning module (basename under repro/core/)
-_OWNER_FILES = {"FlowTable": "engine.py", "FlatAssignState": "assignment.py"}
+_OWNER_FILES = {"FlowTable": "engine.py", "FlatAssignState": "assignment.py",
+                "ComponentIndex": "engine.py"}
 _ARRAY_MUTATORS = {"fill", "sort", "put", "itemset", "resize", "setflags"}
 # blessed exact-float modules: their docstrings define the convention
 _FLOAT_EQ_BLESSED = {"circuit_scheduler.py", "online.py"}
@@ -404,7 +406,8 @@ def _check_float_eq(mod: Module) -> Iterator[Finding]:
 def _committed_vars(mod: Module,
                     fn: ast.FunctionDef | ast.AsyncFunctionDef | None,
                     body: list[ast.stmt]) -> dict[str, str]:
-    """Names bound to FlowTable / FlatAssignState instances in this scope."""
+    """Names bound to committed-state instances (``_OWNER_FILES`` classes:
+    FlowTable / FlatAssignState / ComponentIndex) in this scope."""
     out: dict[str, str] = {}
     if fn is not None:
         for a in (list(fn.args.posonlyargs) + list(fn.args.args)

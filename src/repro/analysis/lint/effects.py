@@ -10,7 +10,8 @@ can *prove* from local syntax plus the recorded type facts:
 
 - ``commit-mutate``: rebinding/in-place write of a ``_commit`` attribute,
   or an RL106-style mutation of a tracked ``FlowTable``/
-  ``FlatAssignState`` object. Skipped inside constructors (building an
+  ``FlatAssignState``/``ComponentIndex`` object. Skipped inside
+  constructors (building an
   object is not mutating committed state) and inside the owning modules
   (``core/engine.py``, ``core/assignment.py``) where these arrays are
   legitimately written — mirroring RL106's owner exemption.

@@ -174,19 +174,51 @@ class FlatAssignState:
     This is what lets the fabric-manager service commit assignments at
     arrival (irrevocably, as the online model requires) without replaying
     the whole history each tick.
+
+    ``locality`` (tau-aware only; default 0.0 = off) is a BATCH-scoped
+    core-affinity bias: within one :meth:`assign` call, once any flow has
+    been placed, a candidate core the call has not used yet pays an extra
+    ``locality * delta`` on its bound in the argmin comparison — "spilling
+    this batch onto another core costs this many phantom
+    reconfigurations". One call is one service tick's arrival batch (or
+    one fault requeue), so each tick's new flows cluster on as few cores
+    as their load allows and the other cores' resource components — which
+    never span cores — go untouched, which is exactly what the
+    delta-scheduling splice reuses (see ``engine.ComponentIndex``). The
+    penalty affects ONLY the argmin comparison, never the per-core
+    load/tau/bound state updates, so the WSPT ordering and tie-break
+    structure (strict ``<``, lowest core index) are untouched, and the
+    affinity resets every call, so no long-run core imbalance accumulates
+    (a core is never more than ``lam`` behind the unbiased argmin).
+    At ``locality=0.0`` the original hot loop runs — choices are
+    bit-identical to the dataclass oracles, and ONLY then does the
+    chunked==one-shot streaming contract hold: with ``locality > 0``
+    chunk boundaries are semantic (they delimit the affinity scope), so
+    locality mode is gated by the referee + wCCT comparisons, never by
+    bit-exactness against a differently-chunked replay. The penalty is
+    priced at the NOMINAL delta and does not follow ``set_delta`` drift:
+    it is a config-level partitioning bias, not a hardware delay.
     """
 
     def __init__(self, policy: str, rates: Annotated[F8, "K"], delta: float,
-                 n_ports: int, *, seed: int = 0) -> None:
+                 n_ports: int, *, seed: int = 0,
+                 locality: float = 0.0) -> None:
         if policy not in ASSIGN_POLICIES:
             raise ValueError(
                 f"unknown policy {policy!r}; one of {ASSIGN_POLICIES}")
+        if locality < 0:
+            raise ValueError(f"locality must be >= 0, got {locality}")
         rates = np.asarray(rates, dtype=np.float64)
         self.policy = policy
         self.rates = rates
         self.delta = float(delta)
         self.n_ports = int(n_ports)
         self.n_assigned = 0
+        #: batch-affinity penalty in units of nominal reconfigurations;
+        #: only the tau-aware policy reads it (rho-only/random ignore it,
+        #: like delta)
+        self.locality = float(locality)
+        self._lam = self.locality * self.delta
         K = rates.shape[0]
         # Per-core reconfiguration delay (fault model: DeltaDrift). All equal
         # to the nominal delta until set_delta diverges one; the undrifted
@@ -274,6 +306,8 @@ class FlatAssignState:
                 up = None
         if self.policy == "tau-aware":
             if up is None and not self._drifted:
+                if self._lam:
+                    return self._assign_tau_aware_local(fi, fj, sizes)
                 return self._assign_tau_aware(fi, fj, sizes)
             up_idx = (range(self.rates.shape[0]) if up is None
                       else np.nonzero(up)[0].tolist())
@@ -344,6 +378,73 @@ class FlatAssignState:
             t += 1
         return choices
 
+    def _assign_tau_aware_local(self, fi: Annotated[I8, "F"],
+                                fj: Annotated[I8, "F"],
+                                sizes: Annotated[F8, "F"]) -> np.ndarray:
+        """Locality-biased tau-aware choices (``locality > 0``).
+
+        The candidate scan of ``_assign_tau_aware`` with one addition: once
+        any flow of THIS ``assign()`` call has been placed, a candidate
+        core the call has not used yet pays ``lam = locality * delta``
+        extra in the argmin comparison. A batch (one tick's arrivals, one
+        fault requeue) therefore stays on as few cores as its load allows
+        — it spills to a fresh core only when the bound gap exceeds
+        ``lam`` — so the other cores' resource components go untouched
+        that tick and their cached tentative rows splice (components never
+        span cores; see ``engine.ComponentIndex``). The state update after
+        the choice is byte-for-byte the unbiased one: the penalty biases
+        WHERE a flow goes, never what a placement costs, and the affinity
+        resets every call, so no long-run imbalance accumulates.
+        """
+        cores, bound, delta = self._cores, self._bound, self.delta
+        lam = self._lam
+        n_ports = self.n_ports
+        choices = np.empty(fi.size, dtype=np.int64)
+        used = [False] * len(cores)
+        any_used = False
+        inf = float("inf")
+        t = 0
+        for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
+            ij = i * n_ports + j
+            best = inf
+            kb = 0
+            k = 0
+            for rl, cl, rt, ct, nzk, rk in cores:
+                new = 0 if nzk[ij] else 1
+                li = (rl[i] + d) / rk + (rt[i] + new) * delta
+                lj = (cl[j] + d) / rk + (ct[j] + new) * delta
+                b = bound[k]
+                if li > b:
+                    b = li
+                if lj > b:
+                    b = lj
+                if any_used and not used[k]:
+                    b += lam
+                if b < best:  # strict: argmin ties -> lowest core index
+                    best = b
+                    kb = k
+                k += 1
+            used[kb] = True
+            any_used = True
+            rl, cl, rt, ct, nzk, rk = cores[kb]
+            if not nzk[ij]:
+                nzk[ij] = 1
+                rt[i] += 1
+                ct[j] += 1
+            rl[i] = rli = rl[i] + d
+            cl[j] = clj = cl[j] + d
+            li = rli / rk + rt[i] * delta
+            lj = clj / rk + ct[j] * delta
+            b = bound[kb]
+            if li > b:
+                b = li
+            if lj > b:
+                b = lj
+            bound[kb] = b
+            choices[t] = kb
+            t += 1
+        return choices
+
     def _assign_tau_aware_sub(self, fi: Annotated[I8, "F"],
                               fj: Annotated[I8, "F"],
                               sizes: Annotated[F8, "F"],
@@ -354,11 +455,17 @@ class FlatAssignState:
         loop (``_assign_tau_aware``), scanning only ``up_idx`` (ascending) —
         with all cores up and no drift the two are bit-identical, and with a
         core masked the surviving cores' floats match a fresh sub-fabric
-        state's exactly.
+        state's exactly. The locality penalty (guarded so the ``lam == 0``
+        path adds no float ops) applies exactly as in
+        ``_assign_tau_aware_local``, keeping masked/drifted assignment
+        consistent with the healthy-fabric bias.
         """
         cores, bound, deltas = self._cores, self._bound, self._delta_c
+        lam = self._lam
         n_ports = self.n_ports
         choices = np.empty(fi.size, dtype=np.int64)
+        used = [False] * len(cores)
+        any_used = False
         inf = float("inf")
         t = 0
         for i, j, d in zip(fi.tolist(), fj.tolist(), sizes.tolist()):
@@ -376,9 +483,14 @@ class FlatAssignState:
                     b = li
                 if lj > b:
                     b = lj
+                if lam and any_used and not used[k]:
+                    b += lam
                 if b < best:  # strict: argmin ties -> lowest core index
                     best = b
                     kb = k
+            if lam:
+                used[kb] = True
+                any_used = True
             rl, cl, rt, ct, nzk, rk = cores[kb]
             delta = deltas[kb]
             if not nzk[ij]:
@@ -483,9 +595,11 @@ class FlatAssignState:
 
 def _flat_tau_aware(fi: Annotated[I8, "F"], fj: Annotated[I8, "F"],
                     sizes: Annotated[F8, "F"], rates: Annotated[F8, "K"],
-                    delta: float, n_ports: int) -> np.ndarray:
+                    delta: float, n_ports: int,
+                    locality: float = 0.0) -> np.ndarray:
     """One-shot tau-aware choices (a fresh ``FlatAssignState`` per call)."""
-    return FlatAssignState("tau-aware", rates, delta, n_ports).assign(fi, fj, sizes)
+    return FlatAssignState("tau-aware", rates, delta, n_ports,
+                           locality=locality).assign(fi, fj, sizes)
 
 
 def _flat_rho_only(fi: Annotated[I8, "F"], fj: Annotated[I8, "F"],
@@ -502,6 +616,7 @@ def assign_fast(
     *,
     seed: int = 0,
     flows: tuple[np.ndarray, ...] | None = None,
+    locality: float = 0.0,
 ) -> Annotated[I8, "F"]:
     """Flat-array assignment: per-flow core choices without Flow objects.
 
@@ -509,13 +624,15 @@ def assign_fast(
     ``coflow.extract_flows(inst, pi)`` (recomputed when omitted); the
     returned ``(F,)`` int64 vector aligns with it. Choices are bit-identical
     to ``assign_tau_aware`` / ``assign_rho_only`` / ``assign_random`` on the
-    same instance and order.
+    same instance and order. ``locality`` (tau-aware only) turns on the
+    fresh-port affinity bias of :class:`FlatAssignState`.
     """
     if flows is None:
         flows = extract_flows(inst, pi)
     _pos, _cid, fi, fj, sizes = flows
     if policy == "tau-aware":
-        return _flat_tau_aware(fi, fj, sizes, inst.rates, float(inst.delta), inst.N)
+        return _flat_tau_aware(fi, fj, sizes, inst.rates, float(inst.delta),
+                               inst.N, locality)
     if policy == "rho-only":
         return _flat_rho_only(fi, fj, sizes, inst.rates, inst.N)
     if policy == "random":

@@ -155,6 +155,7 @@ def build_flow_table(
     seed: int = 0,
     backend: str = "numpy",
     delta_k: Annotated[F8, "K"] | None = None,
+    locality: float = 0.0,
 ) -> FlowTable:
     """Flat assignment front-end: demand tensors -> assigned ``FlowTable``.
 
@@ -173,6 +174,11 @@ def build_flow_table(
     assignment always runs the numpy flat state (bit-identical to the
     streaming ``FabricState`` assignment under the same drift); the
     rho-only and random policies never read delta and ignore ``delta_k``.
+
+    ``locality`` (tau-aware only) turns on the fresh-port affinity bias of
+    ``assignment.FlatAssignState`` — the kernel knows only the unbiased
+    scan, so a locality-biased tau-aware assignment likewise runs the numpy
+    flat state regardless of ``backend``.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
@@ -188,16 +194,17 @@ def build_flow_table(
         from .assignment import FlatAssignState
 
         st = FlatAssignState(policy, inst.rates, inst.delta, inst.N,
-                             seed=seed)
+                             seed=seed, locality=locality)
         for k in range(inst.K):
             if delta_k[k] != inst.delta:  # reprolint: disable=float-eq -- identity check: only overridden cores get a set_delta call
                 st.set_delta(k, float(delta_k[k]))
         _pos, _cid, fi, fj, sizes = flows
         core = st.assign(fi, fj, sizes)
-    elif backend == "pallas" and policy == "tau-aware":
+    elif backend == "pallas" and policy == "tau-aware" and not locality:
         core = _pallas_choices(inst, flows)
     else:
-        core = assign_fast(inst, pi, policy, seed=seed, flows=flows)
+        core = assign_fast(inst, pi, policy, seed=seed, flows=flows,
+                           locality=locality)
     pos, cid, fi, fj, size = flows
     return FlowTable(pos=pos, cid=cid, fi=fi, fj=fj, core=core, size=size)
 
@@ -670,6 +677,7 @@ def run_fast(
     scheduling: str = "work-conserving",
     backend: str = "numpy",
     delta_k: Annotated[F8, "K"] | None = None,
+    locality: float = 0.0,
 ) -> Schedule:
     """Batched-engine counterpart of ``scheduler.run`` (same semantics).
 
@@ -687,12 +695,15 @@ def run_fast(
     ``DeltaDrift``) prices assignment and scheduling with each core's delay
     in force — what the one-shot service plane passes when the fabric has
     drifted. ``None`` (or all-nominal) is the exact pre-drift pipeline.
+    ``locality`` (tau-aware only) is the fresh-port affinity bias — it
+    changes core choices, so the result is gated by the referee and wCCT
+    comparisons, not bit-exactness (see DESIGN.md §Delta-scheduling).
     """
     delta_k = _normalize_delta_k(inst, delta_k)
     pi = order_coflows(inst)
     _, scheduling = _resolve_algorithm(algorithm, scheduling)
     table = build_flow_table(inst, pi, algorithm, seed=seed, backend=backend,
-                             delta_k=delta_k)
+                             delta_k=delta_k, locality=locality)
     t_est, srv = _times_for_table(inst, pi, table, scheduling,
                                   delta_k=delta_k)
     dl_f = None if delta_k is None else delta_k[table.core]
@@ -708,6 +719,7 @@ def run_fast_metrics(
     backend: str = "numpy",
     releases: Annotated[F8, "M"] | None = None,
     delta_k: Annotated[F8, "K"] | None = None,
+    locality: float = 0.0,
 ) -> tuple[np.ndarray, int]:
     """Metrics-only fast path: per-coflow CCTs without object materialization.
 
@@ -728,7 +740,7 @@ def run_fast_metrics(
     delta_k = _normalize_delta_k(inst, delta_k)
     _, scheduling = _resolve_algorithm(algorithm, scheduling)
     table = build_flow_table(inst, pi, algorithm, seed=seed, backend=backend,
-                             delta_k=delta_k)
+                             delta_k=delta_k, locality=locality)
     t_est, srv = _times_for_table(inst, pi, table, scheduling, releases,
                                   delta_k=delta_k)
     dl_f = None if delta_k is None else delta_k[table.core]
@@ -743,6 +755,7 @@ def run_fast_online(
     scheduling: str = "work-conserving",
     backend: str = "numpy",
     delta_k: Annotated[F8, "K"] | None = None,
+    locality: float = 0.0,
 ) -> Schedule:
     """Batched-engine counterpart of ``online.run_online`` (same semantics).
 
@@ -764,7 +777,8 @@ def run_fast_online(
     arrival, _ = online_orders(inst, rel)
     _, scheduling = _resolve_algorithm(algorithm, scheduling)
     table = build_flow_table(inst, arrival, algorithm, seed=seed,
-                             backend=backend, delta_k=delta_k)
+                             backend=backend, delta_k=delta_k,
+                             locality=locality)
     t_est, srv = _times_for_table(inst, arrival, table, scheduling,
                                   releases=rel, delta_k=delta_k)
     dl_f = None if delta_k is None else delta_k[table.core]
@@ -870,6 +884,129 @@ def _touched_rows(rin: np.ndarray, rout: np.ndarray, n_res: int,
     return np.isin(roots, roots[n_new_from:])
 
 
+class ComponentIndex:
+    """Incremental resource-component index over the pending set.
+
+    Maintains the union-find of ``_resource_components`` ACROSS ticks
+    instead of rebuilding it from every pending row each tick: the pending
+    set changes by small deltas (an arrival batch in, committed rows out,
+    fault strand/requeue churn), so the index tracks the multiset of
+    distinct ``(rin, rout)`` resource pairs and updates the union-find only
+    for pairs entering or leaving. ``labels()`` then answers the per-tick
+    component query in one vectorized pointer-jumping pass — replacing the
+    two from-scratch union-finds (``_touched_rows`` + the telemetry call)
+    the splice used to pay per tick, each O(F log F) in the backlog size.
+
+    Exactness contract (differentially pinned in
+    ``tests/test_component_index.py``, and end-to-end by the delta-vs-full
+    twin drives): after any add/remove sequence, ``labels()`` induces the
+    SAME PARTITION of the pending rows as the from-scratch oracle
+    ``_resource_components`` on the same rows. Raw label values may differ
+    while the index is ahead of its last rebuild (union order differs from
+    the oracle's sorted-pair order), but every consumer — the touched-row
+    mask ``isin(roots, roots[seed])``, the component counts, the size
+    histograms — is a partition function, so all computed schedules and
+    telemetry are bit-identical either way. Removing the last copy of a
+    pair can SPLIT a component, which a union-find cannot express
+    incrementally; the index marks itself dirty and the next ``labels()``
+    call rebuilds from the surviving pairs in sorted order (exactly the
+    oracle's procedure — after a rebuild even the raw labels match).
+
+    Mutation ownership: the internal arrays (``_parent``, the pair multiset)
+    are committed scheduling state and MUST only be mutated here in
+    ``core/engine.py`` — reprolint RL106 enforces this statically, exactly
+    as for ``FlowTable`` / ``FlatAssignState``.
+    """
+
+    __slots__ = ("n_res", "span", "_count", "_parent", "_dirty")
+
+    def __init__(self, n_res: int) -> None:
+        self.n_res = int(n_res)
+        #: node ids: ingress resource r -> r, egress resource r -> r + n_res
+        self.span = 2 * self.n_res
+        #: pair-key multiset: rin * span + (rout + n_res) -> multiplicity
+        self._count: dict[int, int] = {}
+        self._parent = np.arange(self.span, dtype=np.int64)
+        self._dirty = False
+
+    @property
+    def n_pairs(self) -> int:
+        """Distinct resource pairs currently present."""
+        return len(self._count)
+
+    def _find(self, x: int) -> int:
+        parent = self._parent
+        root = x
+        while parent[root] != root:
+            root = int(parent[root])
+        while parent[x] != root:
+            parent[x], x = root, int(parent[x])
+        return root
+
+    def add(self, rin: Annotated[I8, "B"],
+            rout: Annotated[I8, "B"]) -> None:
+        """Pending rows entered (arrival batch / fault requeue)."""
+        count = self._count
+        span, n_res = self.span, self.n_res
+        for a, b in zip(rin.tolist(), rout.tolist()):
+            b += n_res
+            key = a * span + b
+            c = count.get(key)
+            if c:
+                count[key] = c + 1
+            else:
+                count[key] = 1
+                ra, rb = self._find(a), self._find(b)
+                if ra != rb:
+                    self._parent[rb] = ra
+
+    def remove(self, rin: Annotated[I8, "B"],
+               rout: Annotated[I8, "B"]) -> None:
+        """Pending rows left (commit / fault strand).
+
+        Dropping the last copy of a pair may split its component; the
+        union-find can only merge, so the index goes dirty and the next
+        ``labels()`` rebuilds from the surviving pairs.
+        """
+        count = self._count
+        span, n_res = self.span, self.n_res
+        for a, b in zip(rin.tolist(), rout.tolist()):
+            key = a * span + (b + n_res)
+            c = count[key] - 1
+            if c:
+                count[key] = c
+            else:
+                del count[key]
+                self._dirty = True
+
+    def _rebuild(self) -> None:
+        """From-scratch union over the surviving pairs, in sorted-key order
+        — the oracle's exact procedure (``_resource_components``), so the
+        rebuilt parent forest is identical to a fresh one."""
+        self._parent = np.arange(self.span, dtype=np.int64)
+        span = self.span
+        for key in sorted(self._count):
+            a, b = self._find(key // span), self._find(key % span)
+            if a != b:
+                self._parent[b] = a
+        self._dirty = False
+
+    def labels(self, nodes: Annotated[I8, "Q"]) -> Annotated[I8, "Q"]:
+        """Component label per node id (use ``labels(rin)`` for row labels,
+        matching the oracle's ingress-root convention; egress nodes are
+        ``r + n_res``). Vectorized pointer jumping — terminates because the
+        parent forest is acyclic with self-loop roots."""
+        if self._dirty:
+            self._rebuild()
+        parent = self._parent
+        lab = parent[nodes]
+        while True:
+            nxt = parent[lab]
+            if np.array_equal(nxt, lab):
+                return lab
+            lab = nxt
+
+
 @dataclasses.dataclass(frozen=True)
 class TickCommit:
     """Circuits committed by one ``FabricState`` tick, as flat arrays.
@@ -940,6 +1077,7 @@ class FabricState:
         delta_schedule: bool = True,
         fault_lookback: float = np.inf,
         tracer: Tracer | None = None,
+        locality: float = 0.0,
     ) -> None:
         policy, scheduling = _resolve_algorithm(algorithm, scheduling)
         if scheduling not in INCREMENTAL_SCHEDULINGS:
@@ -965,8 +1103,13 @@ class FabricState:
         self._tracer: Tracer = NULL_TRACER if tracer is None else tracer
         from .assignment import FlatAssignState
 
+        #: fresh-port affinity bias (tau-aware only; see FlatAssignState):
+        #: keeps each port's resources on few cores so the pending set's
+        #: resource-sharing graph fragments — what gives delta-scheduling
+        #: untouched components to splice
+        self.locality = float(locality)
         self._assign = FlatAssignState(policy, self.rates, self.delta, self.N,
-                                       seed=seed)
+                                       seed=seed, locality=self.locality)
         n_res = self.K * self.N
         #: committed circuit horizons per (core, port) resource
         self.free_in = np.zeros(n_res)
@@ -984,16 +1127,41 @@ class FabricState:
         #: ``None`` = no valid cache (first tick, or a fault perturbed the
         #: pending set / horizons / delays out from under it)
         self._tent: np.ndarray | None = None
+        #: per-row validity of ``_tent`` (same alignment): a fault
+        #: invalidates only the rows whose components it actually perturbed
+        #: (see ``_apply_fault``); invalid rows seed the next tick's touched
+        #: set exactly like new arrivals. ``None`` iff ``_tent`` is None.
+        self._tent_valid: np.ndarray | None = None
+        #: escape hatch for the fault-scoped invalidation: ``False`` drops
+        #: the whole cache on any fault (the pre-PR-10 behavior) — the
+        #: differential tests twin-drive both settings and assert
+        #: bit-identical commits
+        self._fault_scoped_tent = True
+        #: incremental component index maintained across ticks/faults; None
+        #: when delta-scheduling is off or reserving commits everything
+        #: immediately (no tentative rows to splice)
+        self._cindex: ComponentIndex | None = (
+            ComponentIndex(n_res)
+            if delta_schedule and scheduling != "reserving" else None)
         #: delta-scheduling effectiveness counters (rows spliced from the
         #: cache vs rows re-run through the event loop, cumulative)
         self.tent_reused = 0
         self.tent_recomputed = 0
+        #: tentative rows invalidated by fault-scoped cache surgery
+        #: (cumulative; rows a full drop would also have re-derived)
+        self.tent_invalidated = 0
         #: resource-component telemetry (cumulative over ticks): how many
         #: components the pending sets decomposed into, and how many of
         #: them ticks actually re-scheduled — the ROADMAP's
         #: delta-scheduling-leverage diagnostic
         self.components_total = 0
         self.components_touched = 0
+        #: per-tick component-size histograms (cumulative over ticks):
+        #: {rows-per-component: occurrences} for every component seen, and
+        #: for the components whose cached rows were spliced untouched —
+        #: the *where does the splice fail* diagnostic bench_overload emits
+        self.component_size_hist: dict[int, int] = {}
+        self.component_reused_hist: dict[int, int] = {}
         # per-gid registry (appended at admission)
         self._cid: list[int] = []
         self._weight: list[float] = []
@@ -1153,6 +1321,8 @@ class FabricState:
         fi, fj = moved["fi"][order], moved["fj"][order]
         sizes = moved["size"][order]
         core = self._assign.assign(fi, fj, sizes, up=self.core_up)
+        if self._cindex is not None:
+            self._cindex.add(core * self.N + fi, core * self.N + fj)
         add = {
             "gid": moved["gid"][order], "cid": moved["cid"][order],
             "fi": fi, "fj": fj, "core": core, "size": sizes,
@@ -1179,12 +1349,14 @@ class FabricState:
         ``fault/recover`` span carrying the abort/requeue counts.
         """
         with self._tracer.span("fault/recover") as sp:
+            inv0 = self.tent_invalidated
             app = self._apply_fault(event)
             if sp.live:
                 sp.set(event=type(app.event).__name__,
                        aborted=app.n_aborted, requeued=app.requeued,
                        reassigned=app.reassigned_pending,
-                       unfinalized=len(app.unfinalized))
+                       unfinalized=len(app.unfinalized),
+                       invalidated=self.tent_invalidated - inv0)
             return app
 
     @effects("commit-mutate", "fingerprint-mutate", "watermark",
@@ -1208,10 +1380,28 @@ class FabricState:
         k = int(event.core)
         if not 0 <= k < self.K:
             raise ValueError(f"core {k} out of range for K={self.K}")
-        # Any fault can move horizons, delays, or the pending set out from
-        # under the delta-scheduling cache; drop it (next tick recomputes in
-        # full — exactly what correctness after churn requires).
-        self._tent = None
+        # Scoped tentative-cache invalidation (DESIGN.md §Delta-scheduling):
+        # each event type stales only the rows whose next-tick estimates can
+        # actually change — components never span cores, so the blast radius
+        # of a fault on core k is expressible as a row mask or a component
+        # set. `_fault_scoped_tent=False` restores the PR-6 full-drop path
+        # (the twin-drive differential gate pins both bit-identical).
+        if not self._fault_scoped_tent:
+            if self._tent is not None and self.delta_schedule:
+                self.tent_invalidated += int(self._tent.size)
+            self._tent = None
+            self._tent_valid = None
+
+        def _stale(mask: np.ndarray) -> None:
+            # mark cached rows stale; they seed the next tick's dirty set
+            if (self._tent is None or self._tent_valid is None
+                    or not self.delta_schedule):
+                return
+            flip = mask & self._tent_valid
+            n = int(flip.sum())
+            if n:
+                self._tent_valid[flip] = False
+                self.tent_invalidated += n
 
         def _done(aborted: Sequence = (), requeued: int = 0,
                   reassigned: int = 0,
@@ -1227,6 +1417,9 @@ class FabricState:
             self.delta_k[k] = float(event.delta)
             self._drifted = bool(np.any(self.delta_k != self.delta))
             self._assign.set_delta(k, float(event.delta))
+            # the reconfiguration delay is priced per core: only core-k
+            # rows (= the union of core-k components) see new estimates
+            _stale(self._pend["core"] == k)
             return _done()
 
         if isinstance(event, CoreUp):
@@ -1241,6 +1434,9 @@ class FabricState:
             # asserted in tests/test_fault_residue.py).
             self._assign.reset_core(k)
             self._rebuild_horizons()
+            # no cache invalidation: the commit set is unchanged (so the
+            # rebuilt horizons hold the same floats) and a recovered core
+            # has no pending rows — every cached estimate stands
             return _done()
 
         # CoreDown / PortFlap must classify the committed circuits.
@@ -1284,6 +1480,32 @@ class FabricState:
 
         aborted_rows = {name: c[name][abort] for name, _dt in _COMMIT_FIELDS}
         self._commit = {name: c[name][~abort] for name, _dt in _COMMIT_FIELDS}
+        # PortFlap: the flap floor rose on resource r and the aborted
+        # circuits' horizon rollback moves their endpoint resources — stale
+        # every cached row whose component reaches one of those nodes.
+        # (CoreDown needs no mask: components never span cores, so the
+        # blast radius is exactly the strand rows removed below, and the
+        # survivors' horizons keep their untouched-core floats.)
+        if (isinstance(event, PortFlap) and self._cindex is not None
+                and self._tent is not None and self._pend["gid"].size):
+            nr = self._cindex.n_res
+            ab_core = aborted_rows["core"]
+            nodes = np.unique(np.concatenate([
+                np.asarray([r, r + nr], dtype=np.int64),
+                (ab_core * self.N + aborted_rows["fi"]).astype(np.int64),
+                (ab_core * self.N + aborted_rows["fj"]).astype(np.int64)
+                + nr,
+            ]))
+            row_lab = self._cindex.labels(
+                (self._pend["core"] * self.N
+                 + self._pend["fi"]).astype(np.int64))
+            _stale(np.isin(row_lab, self._cindex.labels(nodes)))
+        # stranded rows leave the pending set (and so the index); their
+        # re-queued successors re-enter through _requeue's add below
+        if self._cindex is not None and strand.any():
+            pr = self._pend["core"][strand] * self.N
+            self._cindex.remove(pr + self._pend["fi"][strand],
+                                pr + self._pend["fj"][strand])
         records = tuple(
             AbortedCircuit(
                 gid=int(aborted_rows["gid"][x]),
@@ -1322,6 +1544,27 @@ class FabricState:
             bump = np.zeros(moved["gid"].size, dtype=bool)
             bump[:aborted_rows["gid"].size] = True
             self._requeue(moved, t_f, bump)
+        # realign the tentative cache with the post-fault pending set:
+        # drop strand entries, append invalid placeholders for re-queued
+        # rows (placeholders are never spliced — an invalid row always
+        # seeds the dirty set, so its component re-runs the event loop)
+        if self._tent is not None and self._tent_valid is not None:
+            if self._tent.size != strand.size:
+                self._tent = None
+                self._tent_valid = None
+            else:
+                if strand.any():
+                    if self.delta_schedule:
+                        self.tent_invalidated += int(
+                            self._tent_valid[strand].sum())
+                    self._tent = self._tent[~strand]
+                    self._tent_valid = self._tent_valid[~strand]
+                n_add = int(self._pend["gid"].size) - self._tent.size
+                if n_add > 0:
+                    self._tent = np.concatenate(
+                        [self._tent, np.zeros(n_add)])
+                    self._tent_valid = np.concatenate(
+                        [self._tent_valid, np.zeros(n_add, dtype=bool)])
         self._rebuild_horizons()
         return _done(aborted=records, requeued=aborted_rows["gid"].size,
                      reassigned=int(strand.sum()), unfinalized=unfinalized)
@@ -1433,6 +1676,10 @@ class FabricState:
         n_res = self.K * self.N
         rin = pend["core"] * self.N + pend["fi"]
         rout = pend["core"] * self.N + pend["fj"]
+        # keep the incremental component index in lock-step with the
+        # pending set: the arrival batch's resource pairs enter here
+        if self._cindex is not None and rin.size > n_old:
+            self._cindex.add(rin[n_old:], rout[n_old:])
         # per-flow reconfiguration delay; scalar fast path unless a
         # DeltaDrift moved some core off the nominal delta
         dl_f = None if not self._drifted else self.delta_k[pend["core"]]
@@ -1460,23 +1707,61 @@ class FabricState:
             F = rin.size
             with self._tracer.span("tick/splice") as sp_spl:
                 t_est = np.empty(F)
+                # ONE component query per tick: the incremental index
+                # answers both the touched-row mask and the telemetry the
+                # splice used to derive from two from-scratch union-finds
+                # (_touched_rows + _resource_components, the oracle pair
+                # the differential suites still pin this against)
+                roots = (self._cindex.labels(rin)
+                         if self.delta_schedule and F else None)
+                n_invalid = 0
                 if (self.delta_schedule and self._tent is not None
-                        and self._tent.size == n_old):
+                        and self._tent.size == n_old and n_old):
                     t_est[:n_old] = self._tent
-                    dirty = _touched_rows(rin, rout, n_res, n_old)
+                    # seeds = new arrivals + rows a fault invalidated; the
+                    # dirty set is every row sharing a component with one
+                    seed = np.zeros(F, dtype=bool)
+                    seed[n_old:] = True
+                    if self._tent_valid is not None:
+                        invalid = ~self._tent_valid
+                        n_invalid = int(invalid.sum())
+                        seed[:n_old] |= invalid
+                    touched = (np.unique(roots[seed]) if seed.any()
+                               else roots[:0])
+                    dirty = (np.isin(roots, touched) if touched.size
+                             else np.zeros(F, dtype=bool))
                 else:
                     dirty = np.ones(F, dtype=bool)
-                if self.delta_schedule and F:
-                    roots = _resource_components(rin, rout, n_res)
-                    comp_total = int(np.unique(roots).size)
-                    comp_touched = (int(np.unique(roots[dirty]).size)
-                                    if dirty.any() else 0)
+                    touched = None
+                if roots is not None:
+                    uniq, cnts = np.unique(roots, return_counts=True)
+                    comp_total = int(uniq.size)
+                    if touched is None:
+                        comp_touched = comp_total
+                        reused_cnts = cnts[:0]
+                    elif touched.size:
+                        comp_touched = int(touched.size)
+                        reused_cnts = cnts[~np.isin(uniq, touched)]
+                    else:
+                        comp_touched = 0
+                        reused_cnts = cnts
+                    hist = self.component_size_hist
+                    for s_, n_ in zip(*np.unique(cnts, return_counts=True)):
+                        s_ = int(s_)
+                        hist[s_] = hist.get(s_, 0) + int(n_)
+                    if reused_cnts.size:
+                        hist = self.component_reused_hist
+                        for s_, n_ in zip(*np.unique(reused_cnts,
+                                                     return_counts=True)):
+                            s_ = int(s_)
+                            hist[s_] = hist.get(s_, 0) + int(n_)
                 sub = np.nonzero(dirty)[0]
                 self.tent_reused += int(F - sub.size)
                 self.tent_recomputed += int(sub.size)
                 if sp_spl.live:
                     sp_spl.set(reused=int(F - sub.size),
                                recomputed=int(sub.size),
+                               invalidated=n_invalid,
                                components_total=comp_total,
                                components_touched=comp_touched)
             if sub.size:
@@ -1545,9 +1830,17 @@ class FabricState:
         )
         self.components_total += comp_total
         self.components_touched += comp_touched
+        if self._cindex is not None and commit.any():
+            self._cindex.remove(rin[commit], rout[commit])
         self._pend = {name: pend[name][~commit] for name, _dt in _PEND_FIELDS}
-        self._tent = (None if self.scheduling == "reserving"
-                      else t_est[~commit])
+        if self.scheduling == "reserving":
+            self._tent = None
+            self._tent_valid = None
+        else:
+            self._tent = t_est[~commit]
+            # every surviving row was either spliced from a valid cache
+            # entry or just re-derived by the event loop: all valid
+            self._tent_valid = np.ones(self._tent.size, dtype=bool)
         self.t_now = t_now
         self._ticks += 1
         return out

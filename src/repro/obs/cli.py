@@ -8,7 +8,10 @@ Subcommands:
   report (machine-readable with ``--json``, exit 1 on ``--fail-over``
   threshold breach)
 - ``diff-bench OLD.json NEW.json``  compare two ``BENCH_*.json``
-  artifacts (or directories of them) leaf-by-leaf
+  artifacts (or directories of them) leaf-by-leaf; ``--floors FILE``
+  additionally checks named candidate leaves against committed minima
+  (exit 1 on any breach — the blocking half of the CI bench gate, vs the
+  advisory leaf diff)
 - ``export-chrome TRACE.jsonl -o OUT.json``  Perfetto/chrome://tracing
 
 All output is plain text on stdout (or JSON with ``--json``) so the CI
@@ -25,7 +28,7 @@ from typing import Any
 from .trace import to_chrome_trace
 
 __all__ = ["main", "load_trace", "validate_records", "phase_stats",
-           "diff_phases", "load_bench", "diff_bench"]
+           "diff_phases", "load_bench", "diff_bench", "check_floors"]
 
 _SPAN_REQUIRED = {"kind", "name", "sid", "parent", "depth", "ts", "dur",
                   "attrs"}
@@ -269,6 +272,31 @@ def diff_bench(old: dict[str, Any], new: dict[str, Any],
             "n_flagged": flagged, "threshold": threshold}
 
 
+def check_floors(new: dict[str, Any],
+                 floors: dict[str, float]) -> list[str]:
+    """Check a candidate artifact's leaves against committed minima.
+
+    ``floors`` maps a dotted leaf path (as flattened by
+    ``_numeric_leaves``, e.g. ``rows[2].loc_reuse_mean``) to the minimum
+    value the candidate must reach. A MISSING leaf is a violation too —
+    a renamed or dropped metric must not silently pass the gate. Returns
+    human-readable violation messages (empty = all floors hold).
+    """
+    leaves = _numeric_leaves(new)
+    problems: list[str] = []
+    for key in sorted(floors):
+        floor = float(floors[key])
+        val = leaves.get(key)
+        if val is None:
+            problems.append(
+                f"{key}: leaf missing from candidate artifact "
+                f"(committed floor {floor:g})")
+        elif val < floor:
+            problems.append(
+                f"{key}: {val:g} fell below committed floor {floor:g}")
+    return problems
+
+
 def _print_bench_diff(report: dict[str, Any]) -> None:
     rows = report["rows"]
     if not rows:
@@ -327,6 +355,9 @@ def _build_parser() -> argparse.ArgumentParser:
     b.add_argument("new", help="candidate artifact file or directory")
     b.add_argument("--threshold", type=float, default=0.10)
     b.add_argument("--json", action="store_true")
+    b.add_argument("--floors", default=None, metavar="FILE",
+                   help="JSON {artifact name: {leaf path: minimum}}; "
+                        "exit 1 if any candidate leaf misses its floor")
     b.add_argument("--fail-on-flag", action="store_true",
                    help="exit 1 when any leaf is flagged")
 
@@ -378,19 +409,39 @@ def main(argv: list[str] | None = None) -> int:
             print(f"no artifact pairs between {old} and {new}",
                   file=sys.stderr)
             return 2
+        floors: dict[str, dict[str, float]] = {}
+        if args.floors is not None:
+            with open(args.floors, encoding="utf-8") as fh:
+                # non-dict entries (e.g. a "_comment" string) are not floors
+                floors = {k: v for k, v in json.load(fh).items()
+                          if isinstance(v, dict)}
         any_flag = False
+        violations: list[str] = []
         reports: dict[str, Any] = {}
         for name, op, np_ in pairs:
             report = diff_bench(load_bench(op), load_bench(np_),
                                 threshold=args.threshold)
+            if name in floors:
+                report["floor_violations"] = check_floors(
+                    load_bench(np_), floors.pop(name))
+                violations += [f"{name}: {m}"
+                               for m in report["floor_violations"]]
             reports[name] = report
             any_flag = any_flag or report["n_flagged"] > 0
             if not args.json:
                 print(f"== {name} ==")
                 _print_bench_diff(report)
                 print()
+        # a floors entry with no candidate artifact must not silently pass
+        violations += [f"{name}: artifact has no baseline/candidate pair "
+                       f"(floors: {sorted(fl)})"
+                       for name, fl in sorted(floors.items())]
         if args.json:
             print(json.dumps(reports, indent=2, sort_keys=True))
+        for msg in violations:
+            print(f"FLOOR BREACH {msg}", file=sys.stderr)
+        if violations:
+            return 1
         return 1 if (args.fail_on_flag and any_flag) else 0
 
     if args.cmd == "export-chrome":

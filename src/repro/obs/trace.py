@@ -9,10 +9,17 @@ DESIGN.md §Observability):
   ``tick``                 one ``FabricManager`` service tick (root)
   ``tick/admit``           admission-queue drain under the flow budget
   ``tick/assign``          batch registration + core assignment
-  ``tick/splice``          delta-scheduling cache splice + component split
+  ``tick/splice``          delta-scheduling cache splice against the
+                           incremental component index (``reused``,
+                           ``recomputed``, ``invalidated`` — rows a fault
+                           staled — plus ``components_total`` /
+                           ``components_touched``)
   ``tick/event_loop``      the vectorized event loop over touched rows
   ``tick/program_emit``    circuit-program compilation (+ referee)
-  ``fault/recover``        one fault application (abort/requeue counts)
+  ``fault/recover``        one fault application (abort/requeue counts +
+                           ``invalidated``: tentative rows the scoped
+                           invalidation staled, see DESIGN.md
+                           §Delta-scheduling)
   ``cache/hit|miss|purge`` one-shot program-cache traffic (events)
 
 Determinism contract: the tracer only *observes* — all timestamps come

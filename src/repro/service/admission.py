@@ -31,8 +31,9 @@ allocate -> reject, with work-conserving backfilling):
     (``max_standby``); overflow permanently rejects the oldest standby
     requests, counted in :attr:`AdmissionQueue.dropped`.
 
-Every transition is counted exactly (``rejected``, ``late``, ``deferred``,
-``shed``, ``backfilled``, ``dropped``), so telemetry can account for every
+Every transition is counted exactly (``rejected``, ``late``, ``deferred``
+plus its flow-weighted twin ``deferred_flows``, ``shed``, ``backfilled``,
+``dropped``), so telemetry can account for every
 submitted coflow: admitted + queued + standby + rejected + dropped ==
 submitted, at all times.
 
@@ -148,6 +149,8 @@ class AdmissionQueue:
         self._rejected = self.metrics.counter("admission.rejected")
         self._late = self.metrics.counter("admission.late")
         self._deferred = self.metrics.counter("admission.deferred")
+        self._deferred_flows = self.metrics.counter(
+            "admission.deferred_flows")
         self._shed_c = self.metrics.counter("admission.shed")
         self._backfilled = self.metrics.counter("admission.backfilled")
         self._dropped = self.metrics.counter("admission.dropped")
@@ -168,6 +171,14 @@ class AdmissionQueue:
     def deferred(self) -> int:
         """Flow-budget deferrals (events, not requests)."""
         return self._deferred.value
+
+    @property
+    def deferred_flows(self) -> int:
+        """Flows held back by those deferral events (flow-weighted: one
+        big coflow deferred for 10 ticks adds ``10 * n_flows`` here but
+        only 10 to :attr:`deferred` — the gap is how much *work* the
+        budget is pushing into the future, which the event count hides)."""
+        return self._deferred_flows.value
 
     @property
     def shed(self) -> int:
@@ -312,6 +323,7 @@ class AdmissionQueue:
                 continue
             if budget is not None and req.n_flows > budget:
                 self._deferred.inc()
+                self._deferred_flows.inc(req.n_flows)
                 if not req.deferred:
                     req = dataclasses.replace(req, deferred=True)
                 keep.append(req)

@@ -107,6 +107,15 @@ class FabricConfig:
     #: ``False`` replays the whole tentative backlog every tick (the
     #: bit-identical reference; see ``engine.cross_check_incremental``).
     delta_schedule: bool = True
+    #: Locality-aware assignment strength (``assignment.FlatAssignState``):
+    #: each core/port choice pays ``locality * delta`` per resource-
+    #: component the flow would newly open, biasing a coflow's flows to
+    #: stay inside few components so the delta-splice has something to
+    #: reuse. ``0.0`` is the unbiased tau-aware assignment (bit-identical
+    #: to every prior release); nonzero changes schedules and is gated by
+    #: the referee + the wCCT comparison in ``benchmarks.bench_overload``,
+    #: not bit-exactness.
+    locality: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +179,7 @@ class FabricManager:
             faults=config.faults, track_commits=True,
             delta_schedule=config.delta_schedule,
             fault_lookback=config.fault_lookback,
+            locality=config.locality,
             tracer=self._tracer)
         self.fault_reports: list[FaultReport] = []
         self.queue = AdmissionQueue(max_depth=config.max_queue_depth,
@@ -543,6 +553,7 @@ class FabricManager:
             # overload-policy accounting (exact; see admission.py):
             # admitted + queued + standby + rejected + dropped == submitted
             "deferred": self.queue.deferred,
+            "deferred_flows": self.queue.deferred_flows,
             "shed": self.queue.shed,
             "backfilled": self.queue.backfilled,
             "dropped": self.queue.dropped,
@@ -558,6 +569,12 @@ class FabricManager:
                     + self.state.tent_recomputed) else 0.0),
             "components_total": self.state.components_total,
             "components_touched": self.state.components_touched,
+            "tent_invalidated": self.state.tent_invalidated,
+            # {component size -> count} over every tick's pending set, and
+            # the same histogram restricted to components whose cached rows
+            # were spliced — *where* the delta-splice pays, not just how much
+            "component_size_hist": dict(self.state.component_size_hist),
+            "component_reused_hist": dict(self.state.component_reused_hist),
             "commits_retained": self.state.n_commits_retained,
             "commits_gced": self.state.commits_gced,
             "cache_hits": self.cache.hits,

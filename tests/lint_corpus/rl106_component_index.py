@@ -1,0 +1,17 @@
+"""RL106: mutating committed ComponentIndex state outside core/engine.py."""
+# reprolint: pretend-path=src/repro/service/fake_splicer.py
+import numpy as np
+
+from repro.core.engine import ComponentIndex
+
+
+def tamper(idx: ComponentIndex) -> None:
+    idx._parent[0] = 0
+    idx._parent = np.arange(4, dtype=np.int64)
+    idx._parent.fill(0)
+    idx._count[3] = 1
+
+
+def tamper_built() -> None:
+    idx = ComponentIndex(4)
+    idx._dirty = False

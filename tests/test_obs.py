@@ -40,6 +40,7 @@ from repro.obs import (
     set_tracer,
 )
 from repro.obs.cli import (
+    check_floors,
     diff_bench,
     diff_phases,
     load_trace,
@@ -420,6 +421,47 @@ def test_cli_diff_bench_artifacts(tmp_path, capsys):
     empty = tmp_path / "empty"
     empty.mkdir()
     assert obs_main(["diff-bench", str(empty), str(new_d)]) == 2
+
+
+def test_cli_diff_bench_floors(tmp_path, capsys):
+    old_d, new_d = tmp_path / "old", tmp_path / "new"
+    old_d.mkdir(), new_d.mkdir()
+    base = {"data": {"rows": [{"loc_reuse_mean": 0.45}]}, "wall_s": 1.0}
+
+    # check_floors directly: pass, below-floor, and missing-leaf cases.
+    assert check_floors(base, {"data.rows[0].loc_reuse_mean": 0.4}) == []
+    msgs = check_floors(base, {"data.rows[0].loc_reuse_mean": 0.5,
+                               "data.rows[0].gone": 0.1})
+    assert len(msgs) == 2
+    assert any("fell below committed floor 0.5" in m for m in msgs)
+    assert any("missing from candidate artifact" in m for m in msgs)
+
+    (old_d / "BENCH_overload.json").write_text(json.dumps(base))
+    (new_d / "BENCH_overload.json").write_text(json.dumps(base))
+    floors_ok = tmp_path / "FLOORS.json"
+    floors_ok.write_text(json.dumps({
+        "_comment": "strings are skipped, never treated as floors",
+        "BENCH_overload.json": {"data.rows[0].loc_reuse_mean": 0.4}}))
+    assert obs_main(["diff-bench", str(old_d), str(new_d),
+                     "--floors", str(floors_ok)]) == 0
+    capsys.readouterr()
+
+    # a candidate below the committed floor fails even though the leaf
+    # diff itself is under threshold
+    worse = {"data": {"rows": [{"loc_reuse_mean": 0.38}]}, "wall_s": 1.0}
+    (new_d / "BENCH_overload.json").write_text(json.dumps(worse))
+    assert obs_main(["diff-bench", str(old_d), str(new_d),
+                     "--floors", str(floors_ok), "--threshold", "0.5"]) == 1
+    assert "FLOOR BREACH" in capsys.readouterr().err
+
+    # a floors entry whose artifact pair never materialized is a breach
+    floors_orphan = tmp_path / "FLOORS_orphan.json"
+    floors_orphan.write_text(json.dumps(
+        {"BENCH_missing.json": {"data.x": 1.0}}))
+    (new_d / "BENCH_overload.json").write_text(json.dumps(base))
+    assert obs_main(["diff-bench", str(old_d), str(new_d),
+                     "--floors", str(floors_orphan)]) == 1
+    assert "no baseline/candidate pair" in capsys.readouterr().err
 
 
 def test_cli_export_chrome(traced_run, tmp_path):

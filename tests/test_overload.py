@@ -312,8 +312,10 @@ class TestManagerOverload:
 def test_sustained_2x_overload_p99_bounded():
     """The benchmark's hard gate, at benchmark scale: p99 per-tick wall over
     the last third of a sustained 2x-overload stream stays within the growth
-    ceiling of the first third's, and delta-scheduling stays bit-identical
-    to the full tentative replay on the same stream."""
+    ceiling of the middle (steady-state) third's, and delta-scheduling stays
+    bit-identical to the full tentative replay on the same stream. The PR-10
+    locality gates (splice-reuse floor, weighted-CCT ceiling over the
+    multi-seed mean, locality referee) run inside ``main`` too."""
     from benchmarks.bench_overload import main
 
     out = main(N=20, M=220, n_ticks=28, loads=(2.0,), seed=0,
